@@ -1,0 +1,76 @@
+"""Kernel micro-benchmarks.
+
+Pallas kernels are validated in interpret mode (correctness; timings there
+are Python-interpreter artifacts), so throughput is measured on the
+jit-compiled XLA analogues of the same tilings — plus the flash kernel's
+*structural* HBM-traffic advantage computed from its BlockSpec design
+(the number the TPU roofline substitution in §Perf uses)."""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_eneac import HotspotConfig
+from repro.kernels.flash_attention.ops import kernel_flops, kernel_hbm_bytes
+from repro.kernels.hotspot.ref import hotspot_step_ref
+from repro.kernels.spmm.ref import make_problem, spmm_ell_ref, to_block_ell
+from repro.kernels.spmm.ops import pad_rhs
+
+
+def _time(fn, *args, reps=5) -> float:
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def kernel_rows(*, quick: bool = False) -> List[Tuple[str, float, str]]:
+    rows = []
+    grid = 256 if quick else 1024
+    cfg = HotspotConfig(grid=grid)
+    t = 80.0 + 10 * jax.random.uniform(jax.random.PRNGKey(0), (grid, grid))
+    p = jax.random.uniform(jax.random.PRNGKey(1), (grid, grid))
+    step = jax.jit(lambda t, p: hotspot_step_ref(t, p, cfg))
+    dt = _time(step, t, p)
+    rows.append((f"hotspot_step_{grid}", dt * 1e6,
+                 f"temps_per_ms={grid * grid / dt / 1e3:.0f}"))
+
+    r = 2048 if quick else 8192
+    prob = make_problem(r, 4096, 128, nnz_mean=16.0, seed=1)
+    gather = jax.jit(spmm_ell_ref)
+    dt = _time(gather, jnp.asarray(prob.vals), jnp.asarray(prob.cols),
+               jnp.asarray(prob.rhs))
+    rows.append((f"spmm_gather_{r}", dt * 1e6,
+                 f"rows_per_ms={r / dt / 1e3:.1f}"))
+
+    be = to_block_ell(prob)
+    bvals = jnp.asarray(be.vals)
+    bcols = jnp.asarray(be.colblocks)
+    rhs_pad = jnp.asarray(pad_rhs(prob))
+
+    @jax.jit
+    def block_path(bvals, bcols, rhs_pad):
+        nrb, K, RB, CB = bvals.shape
+        b_blocks = rhs_pad.reshape(-1, CB, rhs_pad.shape[1])[bcols]
+        return jnp.einsum("rkac,rkcn->ran", bvals, b_blocks)
+
+    dt = _time(block_path, bvals, bcols, rhs_pad)
+    rows.append((f"spmm_blockell_{r}", dt * 1e6,
+                 f"rows_per_ms={r / dt / 1e3:.1f};fill={be.padding_ratio():.3f}"))
+
+    # flash kernel structural numbers at prefill_32k scale (stablelm dims)
+    fb = kernel_hbm_bytes(1, 32768, 32768, 32, 8, 160)
+    xla_score_traffic = 6 * 32 * 32768 * 32768 * 4 / 16  # ≈6 crossings, TP/16
+    rows.append((
+        "flash_vs_xla_traffic_32k", fb / 1e9,
+        f"GB_kernel;xla_score_GB={xla_score_traffic / 1e9:.0f};"
+        f"reduction={xla_score_traffic / fb:.0f}x",
+    ))
+    return rows

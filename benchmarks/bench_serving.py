@@ -1,0 +1,43 @@
+"""Serving benchmark: continuous vs static batching (the serving face of
+the paper's interrupt-vs-polling comparison) on identical request sets."""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import make_model
+from repro.serving import Request, ServingEngine
+
+
+def serving_rows(*, quick: bool = False) -> List[Tuple[str, float, str]]:
+    cfg = get_config("tinyllama-1.1b").smoke()
+    model = make_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n_req = 12 if quick else 24
+    rng = np.random.default_rng(0)
+    protos = [
+        (rng.integers(0, cfg.vocab_size, int(rng.integers(2, 10))).astype(np.int32),
+         int(rng.integers(2, 24)))
+        for _ in range(n_req)
+    ]
+    rows = []
+    for mode in ("static", "continuous"):
+        eng = ServingEngine(model, params, slots=4, max_len=96, mode=mode)
+        for i, (prompt, mx) in enumerate(protos):
+            eng.submit(Request(rid=i, prompt=prompt, max_new_tokens=mx))
+        t0 = time.perf_counter()
+        eng.run()
+        wall = time.perf_counter() - t0
+        rep = eng.throughput_report()
+        rows.append((
+            f"serving_{mode}",
+            wall / max(rep["steps"], 1) * 1e6,
+            f"us_per_step;tok_per_step={rep['tokens_per_step']:.3f};"
+            f"steps={rep['steps']};tokens={rep['tokens']}",
+        ))
+    return rows

@@ -1,0 +1,71 @@
+"""Roofline table: reads the dry-run artifacts (experiments/dryrun/*.json)
+and emits the three-term analysis per (arch × shape × mesh)."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+ART_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load_records(mesh: Optional[str] = None) -> List[dict]:
+    recs = []
+    for f in sorted(ART_DIR.glob("*.json")):
+        rec = json.loads(f.read_text())
+        if mesh and rec.get("mesh") != mesh:
+            continue
+        if rec.get("tag"):
+            continue  # perf-iteration variants are reported in §Perf
+        recs.append(rec)
+    return recs
+
+
+def roofline_rows(mesh: str = "pod16x16"):
+    rows = []
+    for rec in load_records(mesh):
+        cell = f"{rec['arch']}|{rec['shape']}|{rec['mesh']}"
+        if rec["status"] != "ok":
+            rows.append((f"roofline_{cell}", 0.0, "SKIPPED:" + rec["reason"][:40]))
+            continue
+        r = rec["roofline"]
+        rows.append((
+            f"roofline_{cell}",
+            r["bound_s"] * 1e6,
+            f"us_bound;dom={r['dominant']};c={r['compute_s']:.3g}s;"
+            f"m={r['memory_s']:.3g}s;x={r['collective_s']:.3g}s;"
+            f"useful={r['useful_flops_ratio']:.3f};"
+            f"fits={rec['memory']['fits']}",
+        ))
+    return rows
+
+
+def summary_table(mesh: str = "pod16x16") -> str:
+    """Markdown table for EXPERIMENTS.md §Roofline."""
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "MODEL/HLO | peak GiB | fits |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in load_records(mesh):
+        if rec["status"] != "ok":
+            lines.append(
+                f"| {rec['arch']} | {rec['shape']} | — | — | — | skip | — | — | "
+                f"{rec['reason'].split(';')[0][:60]} |"
+            )
+            continue
+        r = rec["roofline"]
+        m = rec["memory"]
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | {r['dominant']} | "
+            f"{r['useful_flops_ratio']:.3f} | "
+            f"{m['peak_est_bytes'] / 2**30:.1f} | "
+            f"{'✓' if m['fits'] else 'OVER'} |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(summary_table())

@@ -1,0 +1,30 @@
+"""The paper's SPMM experiment in miniature: MultiDynamic hybrid execution
+of an irregular sparse matmul across the MXU-dense and VPU-gather paths.
+
+    PYTHONPATH=src python examples/hetero_spmm_demo.py
+"""
+
+import numpy as np
+
+from repro.kernels.spmm.ops import make_hybrid_executor
+from repro.kernels.spmm.ref import make_problem, spmm_dense_ref
+
+# Irregular rows (lognormal nnz) — the workload ENEAC targets.
+problem = make_problem(rows=512, cols=1024, n_dense=64,
+                       nnz_mean=12.0, nnz_sigma=1.2, seed=7)
+print(f"SPMM {problem.rows}×{problem.n_cols} · {problem.n_cols}×64, "
+      f"nnz/row: min={problem.nnz.min()} median={int(np.median(problem.nnz))} "
+      f"max={problem.nnz.max()}")
+
+executor, order = make_hybrid_executor(problem)
+decision = executor.converge(rounds=5)
+print(f"MultiDynamic split after adaptation: dense(ACC)={decision.n_dense} "
+      f"rows, sparse(CC)={decision.n_sparse} rows "
+      f"({decision.dense_fraction:.0%} on the dense path)")
+
+result, _ = executor.run(decision)
+inv = np.empty_like(order)
+inv[order] = np.arange(len(order))
+err = np.abs(np.asarray(result)[inv] - spmm_dense_ref(problem)).max()
+print(f"hybrid result max|err| vs dense oracle: {err:.2e}")
+assert err < 1e-3

@@ -1,0 +1,38 @@
+"""End-to-end training driver: a ~100M-parameter llama-family model for a
+few hundred steps on the synthetic corpus, with async checkpointing.
+
+    PYTHONPATH=src python examples/train_small.py [--steps 300]
+
+(~100M params: 12 layers × d512 with an 8k vocab — runs on CPU in minutes;
+the identical driver lowers unchanged on real pods.)
+"""
+
+import argparse
+
+from repro.configs import get_config
+from repro.launch.train import TrainLoopConfig, run_training
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_small")
+    args = ap.parse_args()
+
+    out = run_training(TrainLoopConfig(
+        arch="tinyllama-1.1b",      # llama wiring; smoke-reduced dims
+        steps=args.steps,
+        global_batch=8,
+        seq_len=128,
+        lr=1e-3,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=100,
+        log_every=25,
+    ))
+    print(f"\nfinal: loss {out['first_loss']:.4f} → {out['final_loss']:.4f} "
+          f"({out['mean_tok_per_s']:,.0f} tok/s)")
+    assert out["final_loss"] < out["first_loss"], "loss must decrease"
+
+
+if __name__ == "__main__":
+    main()

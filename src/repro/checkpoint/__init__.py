@@ -1,0 +1,7 @@
+"""Fault-tolerant checkpointing: async save, integrity-verified restore,
+elastic (mesh-changing) restore."""
+
+from .checkpointer import Checkpointer, CheckpointInfo
+from .elastic_restore import elastic_restore_summary, reshard_tree
+
+__all__ = ["Checkpointer", "CheckpointInfo", "reshard_tree", "elastic_restore_summary"]

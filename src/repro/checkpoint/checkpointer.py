@@ -1,0 +1,160 @@
+"""Fault-tolerant asynchronous checkpointing.
+
+ENEAC's interrupt discipline applied to state persistence: the training
+loop never blocks on serialization.  ``save()`` snapshots device arrays to
+host (the only synchronous part), hands the write to a background thread,
+and returns; the completion event fires when the manifest is durably on
+disk.  Restart-safety comes from write-to-temp + atomic rename + manifest
+integrity hashes; the newest *complete* checkpoint wins at restore, so a
+mid-write crash falls back to the previous step.
+
+Layout (one directory per step):
+    <dir>/step_000100.tmp/...      (in-flight)
+    <dir>/step_000100/
+        manifest.json              {step, tree structure, shapes, hashes}
+        arr_00000.npy ...          one file per leaf
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from ..core.interrupts import CompletionEvent
+
+__all__ = ["Checkpointer", "CheckpointInfo"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointInfo:
+    step: int
+    path: Path
+    wall_time: float
+
+
+def _tree_paths(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(jax.tree_util.keystr(p), v) for p, v in flat]
+
+
+class Checkpointer:
+    def __init__(self, directory: str | Path, *, keep: int = 3) -> None:
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._lock = threading.Lock()
+        self._pending: List[threading.Thread] = []
+
+    # ------------------------------------------------------------------
+    # save
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree, *, blocking: bool = False) -> CompletionEvent:
+        """Async checkpoint; returns the completion event (interrupt analogue)."""
+        # device→host snapshot must happen before training mutates buffers
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+        done = CompletionEvent()
+        t = threading.Thread(
+            target=self._write, args=(step, host_tree, done),
+            name=f"ckpt-{step}", daemon=True,
+        )
+        with self._lock:
+            self._pending.append(t)
+        t.start()
+        if blocking:
+            done.wait()
+        return done
+
+    def _write(self, step: int, host_tree, done: CompletionEvent) -> None:
+        t0 = time.perf_counter()
+        final = self.dir / f"step_{step:08d}"
+        tmp = self.dir / f"step_{step:08d}.tmp"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        leaves = _tree_paths(host_tree)
+        manifest = {"step": step, "leaves": []}
+        for i, (path, arr) in enumerate(leaves):
+            arr = np.asarray(arr)
+            fname = f"arr_{i:05d}.npy"
+            np.save(tmp / fname, arr)
+            manifest["leaves"].append(
+                {
+                    "path": path,
+                    "file": fname,
+                    "shape": list(arr.shape),
+                    "dtype": str(arr.dtype),
+                    "sha256": hashlib.sha256(arr.tobytes()).hexdigest()[:16],
+                }
+            )
+        with open(tmp / "manifest.json", "w") as f:
+            json.dump(manifest, f)
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)  # atomic publish
+        self._gc()
+        done.fire(CheckpointInfo(step=step, path=final,
+                                 wall_time=time.perf_counter() - t0))
+
+    def _gc(self) -> None:
+        ckpts = sorted(self.dir.glob("step_????????"))
+        for old in ckpts[: max(0, len(ckpts) - self.keep)]:
+            shutil.rmtree(old, ignore_errors=True)
+
+    def wait_all(self) -> None:
+        with self._lock:
+            pending, self._pending = self._pending, []
+        for t in pending:
+            t.join()
+
+    # ------------------------------------------------------------------
+    # restore
+    # ------------------------------------------------------------------
+    def latest_step(self) -> Optional[int]:
+        ckpts = sorted(self.dir.glob("step_????????"))
+        for c in reversed(ckpts):
+            if (c / "manifest.json").exists():
+                return int(c.name.split("_")[1])
+        return None
+
+    def restore(self, step: Optional[int], like_tree, *, verify: bool = True):
+        """Restore into the structure of ``like_tree`` (host numpy leaves).
+
+        Shape mismatches raise — elastic reshard (different mesh) goes
+        through :mod:`repro.checkpoint.elastic_restore`, which operates on
+        the global arrays this produces.
+        """
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        path = self.dir / f"step_{step:08d}"
+        with open(path / "manifest.json") as f:
+            manifest = json.load(f)
+        by_path = {m["path"]: m for m in manifest["leaves"]}
+        flat, treedef = jax.tree_util.tree_flatten_with_path(like_tree)
+        out = []
+        for kp, like in flat:
+            key = jax.tree_util.keystr(kp)
+            meta = by_path.get(key)
+            if meta is None:
+                raise KeyError(f"checkpoint missing leaf {key}")
+            arr = np.load(path / meta["file"])
+            if verify:
+                h = hashlib.sha256(arr.tobytes()).hexdigest()[:16]
+                if h != meta["sha256"]:
+                    raise IOError(f"checksum mismatch for {key} in step {step}")
+            if tuple(arr.shape) != tuple(like.shape):
+                raise ValueError(
+                    f"{key}: checkpoint shape {arr.shape} != expected {like.shape}"
+                )
+            out.append(arr)
+        return jax.tree_util.tree_unflatten(treedef, out), manifest["step"]

@@ -1,0 +1,40 @@
+"""Elastic restore: load a checkpoint onto a *different* mesh.
+
+After a node failure the :class:`~repro.core.elastic.ElasticMeshManager`
+produces a smaller mesh; the checkpoint holds full (unsharded) host
+arrays, so restoring is: build the new mesh's shardings from the same
+logical rules and ``jax.device_put`` each global array with its new
+sharding.  DP-degree changes also rescale the data-pipeline shard count
+and (optionally) the LR, both returned in the plan summary.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+
+from ..core.elastic import RescalePlan
+from ..parallel.mesh_rules import MeshRules
+
+__all__ = ["reshard_tree", "elastic_restore_summary"]
+
+
+def reshard_tree(host_tree, specs_tree, shapes_tree, rules: MeshRules):
+    """Place host (global) arrays onto the mesh with rule-derived shardings."""
+    shardings = rules.tree_shardings(specs_tree, shapes_tree)
+    return jax.tree.map(
+        lambda arr, sh: jax.device_put(arr, sh), host_tree, shardings
+    )
+
+
+def elastic_restore_summary(plan: RescalePlan, *, old_lr: float) -> Dict[str, Any]:
+    """Bookkeeping deltas after a rescale: linear-scaled LR and the new
+    data-shard count (stateless data pipeline keys on these)."""
+    return {
+        "new_mesh_shape": plan.new_shape,
+        "dp_scale": plan.dp_scale,
+        "new_lr": old_lr * plan.dp_scale,
+        "lost_devices": list(plan.lost_devices),
+        "needs_reshard": plan.needs_reshard,
+    }

@@ -1,0 +1,44 @@
+"""ENEAC core: the paper's contribution as composable JAX/host modules.
+
+* :mod:`repro.core.scheduler` — MultiDynamic heterogeneous chunk scheduler.
+* :mod:`repro.core.interrupts` — completion-driven async engine (interrupt
+  analogue) + busy-wait baseline.
+* :mod:`repro.core.hetero` — throughput-proportional work partitioning.
+* :mod:`repro.core.straggler` — straggler detection and mitigation.
+* :mod:`repro.core.elastic` — node-failure handling / mesh rescale plans.
+* :mod:`repro.core.moe_dispatch` — capacity-chunk MoE dispatch with dense
+  fallback (the LM-native instantiation of MultiDynamic).
+* :mod:`repro.core.parallel_for` — hybrid MXU/VPU executor for irregular
+  workloads (SPMM).
+"""
+
+from .scheduler import Chunk, MultiDynamicScheduler, OracleStaticScheduler, StaticScheduler, WorkerKind
+from .interrupts import AsyncEngine, CompletionEvent, PollingEngine, RunReport
+from .hetero import HeteroPartition, HeterogeneousPartitioner, ThroughputTracker
+from .straggler import MitigationPlan, StragglerDetector, StragglerMitigator, StragglerReport
+from .elastic import DeviceHealth, ElasticMeshManager, RescalePlan
+from .parallel_for import HybridExecutor, SplitDecision
+
+__all__ = [
+    "Chunk",
+    "MultiDynamicScheduler",
+    "StaticScheduler",
+    "OracleStaticScheduler",
+    "WorkerKind",
+    "AsyncEngine",
+    "PollingEngine",
+    "CompletionEvent",
+    "RunReport",
+    "HeteroPartition",
+    "HeterogeneousPartitioner",
+    "ThroughputTracker",
+    "StragglerDetector",
+    "StragglerMitigator",
+    "StragglerReport",
+    "MitigationPlan",
+    "DeviceHealth",
+    "ElasticMeshManager",
+    "RescalePlan",
+    "HybridExecutor",
+    "SplitDecision",
+]

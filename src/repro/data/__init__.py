@@ -1,0 +1,6 @@
+"""Data pipeline: deterministic sharded sources + async prefetch."""
+
+from .prefetch import Prefetcher
+from .tokens import Batch, MemmapTokens, SyntheticTokens
+
+__all__ = ["Batch", "SyntheticTokens", "MemmapTokens", "Prefetcher"]

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for flash attention (GQA, causal/local/full)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["mha_ref"]
+
+
+def mha_ref(
+    q: jax.Array,          # (B, Sq, H, D)
+    k: jax.Array,          # (B, Sk, KVH, D)
+    v: jax.Array,          # (B, Sk, KVH, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    b, sq, h, d = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    scale = d**-0.5 if scale is None else scale
+    qg = q.reshape(b, sq, kvh, g, d)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal or window:
+        qp = jnp.arange(sq)[:, None]
+        kp = jnp.arange(k.shape[1])[None, :]
+        m = jnp.ones((sq, k.shape[1]), bool)
+        if causal:
+            m &= kp <= qp
+        if window:
+            m &= kp > qp - window
+        s = jnp.where(m[None, None, None], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", w, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, d).astype(q.dtype)

@@ -1,0 +1,68 @@
+"""Jit'd wrappers for the HOTSPOT kernels + the CC (VPU/jnp) path.
+
+``hotspot(mode=...)`` selects the Table-1 execution path:
+
+* ``"cc"``  — jnp/XLA path (the paper's CPU-core path; XLA:CPU compiles it
+  to vectorized loops, XLA:TPU to VPU code).
+* ``"hp"``  — Pallas row-tiled kernel, HBM round-trip per time step.
+* ``"hpc"`` — Pallas VMEM-resident kernel, all steps fused.
+
+``rows_slice`` runs the stencil on a chunk of rows only — the unit of work
+the MultiDynamic scheduler hands out (a chunk of the 2048-row iteration
+space).  Chunks carry one halo row on each side so chunked execution is
+exact.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ...configs.paper_eneac import HotspotConfig
+from .hotspot import hotspot_hp_step_pallas, hotspot_hpc_pallas
+from .ref import hotspot_ref, hotspot_step_ref
+
+__all__ = ["hotspot", "hotspot_rows_chunk"]
+
+
+def hotspot(
+    temp: jax.Array,
+    power: jax.Array,
+    cfg: HotspotConfig,
+    steps: int,
+    *,
+    mode: str = "hpc",
+    interpret: bool = True,
+) -> jax.Array:
+    if mode == "cc":
+        return hotspot_ref(temp, power, cfg, steps)
+    if mode == "hpc":
+        return hotspot_hpc_pallas(temp, power, cfg, steps, interpret=interpret)
+    if mode == "hp":
+        t = temp
+        for _ in range(steps):
+            t = hotspot_hp_step_pallas(t, power, cfg, interpret=interpret)
+        return t
+    raise ValueError(f"mode must be cc|hp|hpc, got {mode!r}")
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "steps"))
+def hotspot_rows_chunk(
+    temp_halo: jax.Array,   # (chunk+2, C) — chunk rows plus one halo row each side
+    power: jax.Array,       # (chunk, C)
+    cfg: HotspotConfig,
+    steps: int,
+) -> jax.Array:
+    """CC-path work unit for the scheduler: evolve a row chunk.
+
+    Note: for multi-step evolution the halo must be ``steps`` rows deep for
+    exactness; the benchmark uses steps-deep halos when steps > 1.
+    """
+    t = temp_halo
+    for _ in range(steps):
+        stepped = hotspot_step_ref(t, jnp.pad(power, ((1, 1), (0, 0))), cfg)
+        t = t.at[1:-1].set(stepped[1:-1])
+    return t[1:-1]

@@ -1,0 +1,60 @@
+"""Pure-jnp oracle for the HOTSPOT stencil (Rodinia thermal simulation).
+
+One time step of the explicit solver on a (R, C) grid:
+
+  T'   = T + dt/Cap · ( (T[r,c-1] + T[r,c+1] − 2T)/Rx
+                      + (T[r-1,c] + T[r+1,c] − 2T)/Ry
+                      + (T_amb − T)/Rz + P )
+
+Boundary cells clamp their missing neighbours to themselves (Rodinia's
+edge handling).  Constants follow the Rodinia kernel, parameterized by
+:class:`repro.configs.paper_eneac.HotspotConfig`.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ...configs.paper_eneac import HotspotConfig
+
+__all__ = ["hotspot_coefficients", "hotspot_step_ref", "hotspot_ref"]
+
+
+def hotspot_coefficients(cfg: HotspotConfig, rows: int, cols: int) -> Tuple[float, ...]:
+    grid_h = cfg.chip_height / rows
+    grid_w = cfg.chip_width / cols
+    cap = cfg.spec_heat_si * cfg.t_chip * grid_w * grid_h
+    rx = grid_w / (2.0 * cfg.k_si * cfg.t_chip * grid_h)
+    ry = grid_h / (2.0 * cfg.k_si * cfg.t_chip * grid_w)
+    rz = cfg.t_chip / (cfg.k_si * grid_h * grid_w)
+    max_slope = cfg.max_pd / (cfg.spec_heat_si * cfg.t_chip)
+    dt = cfg.precision / max_slope
+    return cap, rx, ry, rz, dt
+
+
+def hotspot_step_ref(temp: jax.Array, power: jax.Array, cfg: HotspotConfig) -> jax.Array:
+    rows, cols = temp.shape
+    cap, rx, ry, rz, dt = hotspot_coefficients(cfg, rows, cols)
+    t = temp
+    up = jnp.concatenate([t[:1], t[:-1]], axis=0)
+    down = jnp.concatenate([t[1:], t[-1:]], axis=0)
+    left = jnp.concatenate([t[:, :1], t[:, :-1]], axis=1)
+    right = jnp.concatenate([t[:, 1:], t[:, -1:]], axis=1)
+    delta = (dt / cap) * (
+        power
+        + (left + right - 2.0 * t) / rx
+        + (up + down - 2.0 * t) / ry
+        + (cfg.amb_temp - t) / rz
+    )
+    return t + delta
+
+
+def hotspot_ref(temp: jax.Array, power: jax.Array, cfg: HotspotConfig, steps: int) -> jax.Array:
+    def body(t, _):
+        return hotspot_step_ref(t, power, cfg), None
+
+    out, _ = jax.lax.scan(body, temp, None, length=steps)
+    return out

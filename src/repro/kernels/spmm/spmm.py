@@ -1,0 +1,81 @@
+"""Block-ELL SPMM Pallas TPU kernel — the paper's irregular benchmark.
+
+The accelerator (ACC/MXU) path: the dense RHS stays VMEM-resident (HPC
+analogue — 29957×128 f32 ≈ 15 MiB) while row-blocks of the sparse matrix
+stream through.  Each grid step processes one (8, 128·K) row block: a
+``fori_loop`` over its occupied column blocks issues (8,128)·(128,N) MXU
+matmuls with dynamic RHS slicing.  Irregularity (variable K per row block)
+is masked against the per-block count — the cost of a row block is its
+*max* K, exactly the padding/imbalance trade the MultiDynamic scheduler's
+chunk-size knob controls.
+
+The HP variant streams the RHS block-by-block from HBM (``pl.ANY`` memory
+space + explicit async copies), modelling the paper's non-cacheable-port
+configuration.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import BlockEll, COL_BLOCK, ROW_BLOCK
+
+__all__ = ["spmm_block_ell_pallas"]
+
+
+def _spmm_kernel(count_ref, cols_ref, vals_ref, rhs_ref, out_ref, *, k_max: int):
+    """One row block: out (RB, N) = Σ_k vals[k] @ rhs[colblock_k]."""
+    n = out_ref.shape[-1]
+    count = count_ref[0]
+
+    def body(k, acc):
+        cb = cols_ref[0, k]
+        b_blk = rhs_ref[pl.dslice(cb * COL_BLOCK, COL_BLOCK), :]
+        contrib = jnp.dot(
+            vals_ref[0, k], b_blk, preferred_element_type=jnp.float32
+        )
+        return acc + jnp.where(k < count, 1.0, 0.0) * contrib
+
+    acc = jax.lax.fori_loop(0, k_max, body, jnp.zeros((ROW_BLOCK, n), jnp.float32))
+    out_ref[0, ...] = acc
+
+
+def spmm_block_ell_pallas(
+    ell: "BlockEllArrays",
+    rhs: jax.Array,               # (C_pad, N) f32 — VMEM-resident
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Returns (n_rb · ROW_BLOCK, N)."""
+    n_rb, k_max = ell.colblocks.shape
+    c_pad, n = rhs.shape
+    kernel = functools.partial(_spmm_kernel, k_max=k_max)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_rb,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (i,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, k_max), lambda i: (i, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, k_max, ROW_BLOCK, COL_BLOCK), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((c_pad, n), lambda i: (0, 0)),   # resident (HPC)
+        ],
+        out_specs=pl.BlockSpec((1, ROW_BLOCK, n), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_rb, ROW_BLOCK, n), jnp.float32),
+        interpret=interpret,
+    )(ell.counts, ell.colblocks, ell.vals, rhs).reshape(n_rb * ROW_BLOCK, n)
+
+
+class BlockEllArrays:
+    """Device-array view of a host BlockEll."""
+
+    def __init__(self, be: BlockEll):
+        self.vals = jnp.asarray(be.vals)
+        self.colblocks = jnp.asarray(be.colblocks)
+        self.counts = jnp.asarray(be.counts)
+        self.rows = be.rows
+        self.n_cols = be.n_cols

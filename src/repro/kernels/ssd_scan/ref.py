@@ -1,0 +1,18 @@
+"""Oracle for the SSD (Mamba2) chunked scan kernel — re-exports the model
+implementation, which is itself validated against decode parity."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...models.ssm import _ssd_chunked
+
+__all__ = ["ssd_ref"]
+
+
+def ssd_ref(x, log_a, Bm, Cm, chunk: int):
+    """x: (B,S,H,P) pre-scaled by dt; log_a: (B,S,H); Bm/Cm: (B,S,N).
+
+    Returns (y, final_state) — the pure-jnp chunked SSD evaluation."""
+    return _ssd_chunked(x, log_a, Bm, Cm, chunk)

@@ -1,0 +1,10 @@
+"""Launchers: production mesh, multi-pod dry-run, trainer, server, perf.
+
+NOTE: ``dryrun`` and ``perf`` set XLA_FLAGS on import (512 placeholder
+devices) and must be imported only as entry points, never from library
+code — everything else here is import-safe.
+"""
+
+from .mesh import TPU_V5E, HardwareSpec, make_production_mesh, make_test_mesh
+
+__all__ = ["make_production_mesh", "make_test_mesh", "HardwareSpec", "TPU_V5E"]

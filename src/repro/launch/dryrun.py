@@ -1,0 +1,203 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count at first
+init, and only the dry-run wants 512 placeholder host devices.
+
+Per cell this driver:
+  1. builds the production mesh (16×16 single-pod / 2×16×16 multi-pod),
+  2. resolves shardings from the mesh rules,
+  3. ``jit(step).lower(**input_specs).compile()`` — any sharding mismatch,
+     compile-time OOM, or unsupported collective fails the cell,
+  4. records ``memory_analysis()`` / ``cost_analysis()`` plus the
+     loop-corrected HLO report (FLOPs / HBM traffic / collective bytes)
+     into ``experiments/dryrun/<arch>__<shape>__<mesh>.json``.
+
+Usage:
+  python -m repro.launch.dryrun --arch stablelm-12b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod | --both-meshes]
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from ..configs import ARCH_NAMES, SHAPES, cell_status, get_config
+from ..models import make_model
+from ..optim import AdamW
+from ..parallel.mesh_rules import MeshRules
+from .hlo_analysis import analyze_hlo
+from .mesh import TPU_V5E, make_production_mesh
+from .steps import make_decode_step, make_prefill_step, make_train_step
+
+DEFAULT_OUT = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
+             *, overrides=None, tag: str = "") -> dict:
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    shape = SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell_id = f"{arch}__{shape_name}__{mesh_name}" + (f"__{tag}" if tag else "")
+    runnable, reason = cell_status(cfg, shape)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "tag": tag,
+        "status": "skip",
+        "reason": reason,
+    }
+    if not runnable:
+        _write(out_dir, cell_id, rec)
+        return rec
+
+    model = make_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    rules = MeshRules(mesh, cfg.parallel)
+
+    t0 = time.time()
+    import jax.numpy as jnp
+    opt_dtype = jnp.bfloat16 if cfg.parallel.opt_state_dtype == "bfloat16" else jnp.float32
+    with mesh:
+        if shape.kind == "train":
+            opt = AdamW(state_dtype=opt_dtype)
+            bundle = make_train_step(model, opt, rules, shape)
+            args = (
+                model.abstract_params(),
+                opt.abstract_state(model.abstract_params()),
+                model.input_specs(shape)["batch"],
+            )
+        elif shape.kind == "prefill":
+            bundle = make_prefill_step(model, rules, shape)
+            args = (model.abstract_params(), model.input_specs(shape)["batch"])
+        else:  # decode
+            bundle = make_decode_step(model, rules, shape)
+            spec = model.input_specs(shape)
+            args = (model.abstract_params(), spec["tokens"], spec["positions"],
+                    spec["caches"])
+        lowered = bundle.jit().lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    rep = analyze_hlo(compiled.as_text())
+    hw = TPU_V5E
+
+    model_fl = model.model_flops(shape)
+    flops_dev = rep.dot_flops
+    compute_s = flops_dev / hw.peak_flops
+    memory_s = rep.hbm_bytes / hw.hbm_bw
+    collective_s = rep.collective_bytes / hw.ici_bw
+    dominant = max(
+        ("compute", compute_s), ("memory", memory_s), ("collective", collective_s),
+        key=lambda kv: kv[1],
+    )[0]
+
+    rec.update(
+        status="ok",
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        n_devices=n_dev,
+        memory={
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "peak_est_bytes": int(ma.argument_size_in_bytes + ma.temp_size_in_bytes),
+            "hbm_capacity": int(hw.hbm_bytes),
+            "fits": bool(
+                ma.argument_size_in_bytes + ma.temp_size_in_bytes < hw.hbm_bytes
+            ),
+        },
+        cost_analysis={
+            "flops_uncorrected": float(ca.get("flops", 0.0)),
+            "bytes_accessed_uncorrected": float(ca.get("bytes accessed", 0.0)),
+        },
+        hlo={
+            "dot_flops_per_device": flops_dev,
+            "hbm_bytes_per_device": rep.hbm_bytes,
+            "collective_bytes_per_device": rep.collective_bytes,
+            "collective_by_kind": rep.collective_by_kind,
+            "top_collectives": rep.top_collectives,
+            "top_traffic": rep.top_traffic,
+            "trip_counts": rep.trip_counts,
+            "notes": rep.notes,
+        },
+        roofline={
+            "compute_s": compute_s,
+            "memory_s": memory_s,
+            "collective_s": collective_s,
+            "dominant": dominant,
+            "bound_s": max(compute_s, memory_s, collective_s),
+            "model_flops": model_fl,
+            "useful_flops_ratio": model_fl / max(flops_dev * n_dev, 1.0),
+        },
+    )
+    _write(out_dir, cell_id, rec)
+    return rec
+
+
+def _write(out_dir: Path, cell_id: str, rec: dict) -> None:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    with open(out_dir / f"{cell_id}.json", "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true", help="run every cell")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", type=Path, default=DEFAULT_OUT)
+    args = ap.parse_args()
+
+    cells = []
+    archs = ARCH_NAMES if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    failures = 0
+    for a, s, mp in cells:
+        label = f"{a} × {s} × {'2x16x16' if mp else '16x16'}"
+        try:
+            rec = run_cell(a, s, mp, args.out)
+            if rec["status"] == "skip":
+                print(f"SKIP {label}: {rec['reason']}")
+                continue
+            r = rec["roofline"]
+            fits = "fits" if rec["memory"]["fits"] else "OVER-HBM"
+            print(
+                f"OK   {label}: compile {rec['compile_s']}s, "
+                f"peak {(rec['memory']['peak_est_bytes'])/2**30:.1f}GiB ({fits}), "
+                f"terms c/m/x = {r['compute_s']:.3f}/{r['memory_s']:.3f}/"
+                f"{r['collective_s']:.3f}s → {r['dominant']}"
+            )
+        except Exception as e:  # noqa: BLE001 — report and continue the sweep
+            failures += 1
+            print(f"FAIL {label}: {type(e).__name__}: {e}")
+            traceback.print_exc(limit=3)
+    print(f"\n{len(cells) - failures}/{len(cells)} cells passed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

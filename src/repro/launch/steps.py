@@ -1,0 +1,239 @@
+"""Jittable training / serving steps + their sharding resolution.
+
+``make_train_step`` returns the full production step (fwd + bwd + clip +
+AdamW + apply) plus the in/out shardings resolved from the mesh rules —
+the exact object the dry-run lowers and the trainer executes.
+
+``make_decode_step`` / ``make_prefill_step`` are the serving analogues.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import InputShape, ModelConfig
+from ..models import Model
+from ..optim import AdamW, clip_by_global_norm
+from ..parallel.mesh_rules import MeshRules, use_rules
+
+__all__ = ["TrainStepBundle", "make_train_step", "make_decode_step", "make_prefill_step",
+           "batch_shardings"]
+
+GRAD_CLIP = 1.0
+
+
+def _batch_specs(cfg: ModelConfig, kind: str) -> Dict[str, tuple]:
+    specs = {}
+    if kind == "train":
+        specs = {"tokens": ("act_batch", None), "labels": ("act_batch", None),
+                 "mask": ("act_batch", None)}
+    elif kind == "prefill":
+        specs = {"tokens": ("act_batch", None)}
+    if cfg.family == "encdec" and kind in ("train", "prefill"):
+        specs["frames"] = ("act_batch", None, "act_embed")
+    if cfg.family == "vlm" and kind in ("train", "prefill"):
+        specs["image_embeds"] = ("act_batch", None, "act_embed")
+    return specs
+
+
+def batch_shardings(model: Model, shape: InputShape, rules: MeshRules):
+    """NamedShardings for the input batch of a given shape."""
+    specs = _batch_specs(model.cfg, shape.kind)
+    abstract = model.input_specs(shape)
+    if shape.kind in ("train", "prefill"):
+        return {
+            k: rules.sharding(specs[k], abstract["batch"][k].shape) for k in specs
+        }
+    raise ValueError("decode shardings are handled by make_decode_step")
+
+
+class TrainStepBundle:
+    """Everything needed to lower/execute one training step."""
+
+    def __init__(self, step_fn, in_shardings, out_shardings, donate_argnums):
+        self.step_fn = step_fn
+        self.in_shardings = in_shardings
+        self.out_shardings = out_shardings
+        self.donate_argnums = donate_argnums
+
+    def jit(self):
+        return jax.jit(
+            self.step_fn,
+            in_shardings=self.in_shardings,
+            out_shardings=self.out_shardings,
+            donate_argnums=self.donate_argnums,
+        )
+
+
+def default_microbatches(cfg: ModelConfig, shape: InputShape, rules: MeshRules,
+                         *, target_tokens_per_device: int = 8192) -> int:
+    """Pick the grad-accum count so one microbatch's activations fit HBM.
+
+    The microbatches ARE the ENEAC iteration space: the hetero trainer
+    assigns different counts per DP group (see core/hetero.py); this picks
+    the homogeneous default.
+    """
+    if cfg.parallel.microbatches > 1:
+        return cfg.parallel.microbatches
+    dp = 1
+    for ax in ("pod", "data"):
+        if ax in rules.mesh.axis_names:
+            dp *= rules.mesh.shape[ax]
+    tokens_per_device = shape.global_batch * shape.seq_len // dp
+    mb = max(1, tokens_per_device // target_tokens_per_device)
+    # microbatch must divide the per-DP-group batch
+    per_group = max(1, shape.global_batch // dp)
+    while per_group % mb and mb > 1:
+        mb -= 1
+    return mb
+
+
+def make_train_step(
+    model: Model,
+    optimizer: AdamW,
+    rules: MeshRules,
+    shape: InputShape,
+    *,
+    lr: float = 3e-4,
+    loss_chunk: int = 1024,
+    microbatches: Optional[int] = None,
+) -> TrainStepBundle:
+    cfg = model.cfg
+    mb = microbatches if microbatches is not None else default_microbatches(cfg, shape, rules)
+    # each microbatch must still shard over the full DP extent
+    dp = 1
+    for ax in ("pod", "data"):
+        if ax in rules.mesh.axis_names:
+            dp *= rules.mesh.shape[ax]
+    while mb > 1 and (shape.global_batch % mb or (shape.global_batch // mb) % dp):
+        mb -= 1
+
+    def one_loss(params, batch):
+        return model.loss_fn(params, batch, loss_chunk=loss_chunk)
+
+    def train_step(params, opt_state, batch):
+        with use_rules(rules):
+            if mb > 1:
+                # gradient accumulation over the ENEAC microbatch chunks
+                def split(x):
+                    b = x.shape[0]
+                    return x.reshape(mb, b // mb, *x.shape[1:])
+
+                acc_dtype = (
+                    jnp.bfloat16
+                    if cfg.parallel.grad_accum_dtype == "bfloat16"
+                    else jnp.float32
+                )
+                mbatch = {k: split(v) for k, v in batch.items()}
+                g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dtype),
+                                  params)
+                m0 = {"loss": jnp.zeros(()), "ce_loss": jnp.zeros(())}
+
+                def acc_body(carry, xs):
+                    gacc, macc = carry
+                    (loss, metrics), grads = jax.value_and_grad(
+                        one_loss, has_aux=True)(params, xs)
+                    gacc = jax.tree.map(
+                        lambda a, g: a + (g.astype(a.dtype) / mb), gacc, grads)
+                    macc = {k: macc[k] + metrics[k] / mb for k in macc}
+                    return (gacc, macc), 0.0
+
+                (grads, metrics), _ = jax.lax.scan(acc_body, (g0, m0), mbatch)
+            else:
+                (loss, metrics), grads = jax.value_and_grad(
+                    one_loss, has_aux=True)(params, batch)
+                metrics = {"loss": metrics["loss"], "ce_loss": metrics["ce_loss"]}
+            grads, gnorm = clip_by_global_norm(grads, GRAD_CLIP)
+            updates, opt_state = optimizer.update(grads, opt_state, params,
+                                                  jnp.asarray(lr, jnp.float32))
+            params = AdamW.apply_updates(params, updates)
+            metrics = dict(metrics)
+            metrics["grad_norm"] = gnorm
+        return params, opt_state, metrics
+
+    aparams = model.abstract_params()
+    pspecs = model.param_specs()
+    p_sh = rules.tree_shardings(pspecs, aparams)
+    astate = optimizer.abstract_state(aparams)
+    sspecs = optimizer.state_specs(pspecs)
+    o_sh = jax.tree.map(
+        lambda axes, sds: rules.sharding(axes, sds.shape),
+        sspecs,
+        astate,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(a, (str, type(None))) for a in x),
+    )
+    b_sh = batch_shardings(model, shape, rules)
+    metric_sh = None  # replicated scalars; let XLA infer
+    return TrainStepBundle(
+        step_fn=train_step,
+        in_shardings=(p_sh, o_sh, b_sh),
+        out_shardings=(p_sh, o_sh, metric_sh),
+        donate_argnums=(0, 1),
+    )
+
+
+def make_decode_step(model: Model, rules: MeshRules, shape: InputShape) -> TrainStepBundle:
+    """serve_step: one new token against a seq_len-sized cache."""
+    cfg = model.cfg
+    B, S = shape.global_batch, shape.seq_len
+
+    def serve_step(params, tokens, positions, caches):
+        with use_rules(rules):
+            logits, new_caches = model.decode_step(params, tokens, positions, caches)
+        return logits, new_caches
+
+    aparams = model.abstract_params()
+    p_sh = rules.tree_shardings(model.param_specs(), aparams)
+    acaches = model.abstract_caches(B, S)
+    cspecs = model.cache_specs(B, S)
+    c_sh = jax.tree.map(
+        lambda axes, sds: rules.sharding(axes, sds.shape),
+        cspecs,
+        acaches,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(a, (str, type(None))) for a in x),
+    )
+    tok_sh = rules.sharding(("act_batch", None), (B, 1))
+    logit_sh = rules.sharding(("act_batch", "act_vocab"), (B, cfg.padded_vocab))
+    return TrainStepBundle(
+        step_fn=serve_step,
+        in_shardings=(p_sh, tok_sh, tok_sh, c_sh),
+        out_shardings=(logit_sh, c_sh),
+        donate_argnums=(3,),
+    )
+
+
+def make_prefill_step(model: Model, rules: MeshRules, shape: InputShape) -> TrainStepBundle:
+    cfg = model.cfg
+    B, S = shape.global_batch, shape.seq_len
+
+    def prefill_step(params, batch):
+        with use_rules(rules):
+            logits, caches = model.prefill(params, batch, max_len=S)
+        return logits, caches
+
+    aparams = model.abstract_params()
+    p_sh = rules.tree_shardings(model.param_specs(), aparams)
+    b_sh = batch_shardings(model, shape, rules)
+    acaches = model.abstract_caches(B, S)
+    cspecs = model.cache_specs(B, S)
+    c_sh = jax.tree.map(
+        lambda axes, sds: rules.sharding(axes, sds.shape),
+        cspecs,
+        acaches,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(a, (str, type(None))) for a in x),
+    )
+    logit_sh = rules.sharding(("act_batch", "act_vocab"), (B, cfg.padded_vocab))
+    return TrainStepBundle(
+        step_fn=prefill_step,
+        in_shardings=(p_sh, b_sh),
+        out_shardings=(logit_sh, c_sh),
+        donate_argnums=(),
+    )

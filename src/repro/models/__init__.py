@@ -1,0 +1,5 @@
+"""Model zoo: all assigned architectures over shared functional blocks."""
+
+from .model_factory import Model, make_model
+
+__all__ = ["Model", "make_model"]

@@ -1,0 +1,341 @@
+"""Attention: GQA with optional qk-norm, RoPE, local windows, KV caches.
+
+Three execution paths, one math:
+
+* ``dense`` — plain einsum softmax; used for short sequences and as the
+  reference oracle.
+* ``chunked`` — lax.scan over query chunks with a bounded (chunk × S)
+  score buffer; exact (not approximate) and keeps the working set
+  VMEM-scale for the 32k shapes.  This is the XLA-lowered production path
+  the roofline reads; the Pallas flash kernel (kernels/flash_attention)
+  is the TPU-native replacement, validated against the same oracle.
+* ``decode`` — single-token query against a (possibly rolling) KV cache.
+
+Weights use fused 2D layouts — wq: (d_model, H·hd) — so tensor-parallel
+sharding divides the fused head axis evenly for every assigned arch
+(including qwen3-14b's 40 heads, which do NOT divide a 16-way mesh axis,
+while 40·128 = 5120 does).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..parallel.mesh_rules import shard_hint
+from .layers import Builder, apply_rope, rms_norm
+
+__all__ = ["attention_params", "KVCache", "attention", "init_kv_cache"]
+
+_NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def attention_params(b: Builder, cfg: ModelConfig, *, bias: bool = False):
+    """Q/K/V/O projections (+ qk-norm scales) under the current scope."""
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    p = {
+        "wq": b.param("wq", (d, qd), ("embed", "qheads")),
+        "wk": b.param("wk", (d, kvd), ("embed", "kvheads")),
+        "wv": b.param("wv", (d, kvd), ("embed", "kvheads")),
+        "wo": b.param("wo", (qd, d), ("qheads", "embed")),
+    }
+    if bias:
+        p["bq"] = b.param("bq", (qd,), ("qheads",), init="zeros")
+        p["bk"] = b.param("bk", (kvd,), ("kvheads",), init="zeros")
+        p["bv"] = b.param("bv", (kvd,), ("kvheads",), init="zeros")
+        p["bo"] = b.param("bo", (d,), ("embed",), init="zeros")
+    if cfg.qk_norm:
+        p["q_norm"] = b.param("q_norm", (cfg.head_dim,), ("heads_vec",), init="zeros")
+        p["k_norm"] = b.param("k_norm", (cfg.head_dim,), ("heads_vec",), init="zeros")
+    return p
+
+
+class KVCache(NamedTuple):
+    """Fused-layout cache: (B, S_cache, KVH*hd).  For windowed attention
+    S_cache = window and writes wrap (rolling buffer).
+
+    ``length`` is PER-SEQUENCE (B,) — continuous-batching serving refills
+    one slot while its neighbours are mid-generation, so every sequence
+    has its own write position and validity horizon."""
+
+    k: jax.Array
+    v: jax.Array
+    length: jax.Array  # (B,) int32 — tokens cached per sequence
+
+    def uniform_length(self):
+        return self.length[0]
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, window: int = 0):
+    s = min(window, max_len) if window else max_len
+    shape = (batch, s, cfg.kv_dim)
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return KVCache(
+        k=jnp.zeros(shape, dt),
+        v=jnp.zeros(shape, dt),
+        length=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def kv_cache_specs(cfg: ModelConfig, batch: int = 0, max_len: int = 0, window: int = 0):
+    """Logical-axes mirror of the cache (for mesh-rule resolution)."""
+    return KVCache(
+        k=("act_batch", None, "act_kv"),
+        v=("act_batch", None, "act_kv"),
+        length=("act_batch",),
+    )
+
+
+def abstract_kv_cache(cfg: ModelConfig, batch: int, max_len: int, window: int = 0):
+    s = min(window, max_len) if window else max_len
+    shape = (batch, s, cfg.kv_dim)
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return KVCache(
+        k=jax.ShapeDtypeStruct(shape, dt),
+        v=jax.ShapeDtypeStruct(shape, dt),
+        length=jax.ShapeDtypeStruct((batch,), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# core math
+# ---------------------------------------------------------------------------
+def _split_heads(x: jax.Array, n: int, hd: int) -> jax.Array:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, hd)
+
+
+def _gqa_scores(q, k):
+    """q: (B,Sq,KV,G,hd)  k: (B,Sk,KV,hd) → (B,KV,G,Sq,Sk) fp32."""
+    return jnp.einsum("bqkgh,bskh->bkgqs", q, k, preferred_element_type=jnp.float32)
+
+
+def _gqa_out(w, v):
+    """w: (B,KV,G,Sq,Sk)  v: (B,Sk,KV,hd) → (B,Sq,KV,G,hd)."""
+    return jnp.einsum("bkgqs,bskh->bqkgh", w, v.astype(w.dtype))
+
+
+def _softmax(scores, mask):
+    scores = jnp.where(mask, scores, _NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - jax.lax.stop_gradient(m))
+    s = jnp.sum(e, axis=-1, keepdims=True)
+    return e / s
+
+
+def _causal_mask(q_pos, k_pos, window: int = 0):
+    """(…,Sq,Sk) bool; window > 0 also lower-bounds (local attention)."""
+    m = k_pos[None, :] <= q_pos[:, None]
+    if window:
+        m &= k_pos[None, :] > (q_pos[:, None] - window)
+    return m
+
+
+def _dense_attention(q, k, v, cfg, *, causal: bool, window: int, q_offset=0):
+    b, sq, kvh, g, hd = q.shape
+    sk = k.shape[1]
+    scores = _gqa_scores(q, k) * (cfg.head_dim**-0.5)
+    if causal:
+        qp = jnp.arange(sq) + q_offset
+        kp = jnp.arange(sk)
+        mask = _causal_mask(qp, kp, window)[None, None, None]
+    else:
+        mask = jnp.ones((1, 1, 1, sq, sk), bool)
+    w = _softmax(scores, mask)
+    return _gqa_out(w, v)
+
+
+def _chunked_attention(
+    q, k, v, cfg, *, causal: bool, window: int, chunk: int, kv_chunk: int = 2048
+):
+    """Exact online-softmax attention, double-chunked (flash-style in XLA).
+
+    Outer ``lax.scan`` over query chunks, inner scan over KV chunks with a
+    running (max, denom, accumulator) — the score buffer is bounded at
+    (B, KV, G, q_chunk, kv_chunk) regardless of sequence length.  This is
+    the XLA-lowered production path; kernels/flash_attention is the
+    TPU-native Pallas version of the same schedule.
+    """
+    b, sq, kvh, g, hd = q.shape
+    sk = k.shape[1]
+    assert sq % chunk == 0, (sq, chunk)
+    kvc = min(kv_chunk, sk)
+    if sk % kvc:
+        kvc = sk  # fallback: single kv chunk
+    n_q = sq // chunk
+    n_kv = sk // kvc
+    scale = cfg.head_dim**-0.5
+    qs = q.reshape(b, n_q, chunk, kvh, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    ks = k.reshape(b, n_kv, kvc, kvh, hd).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(b, n_kv, kvc, kvh, hd).transpose(1, 0, 2, 3, 4)
+
+    @jax.checkpoint  # flash-style backward: recompute scores per q-chunk
+    def q_body(_, q_xs):
+        qi, q_idx = q_xs
+        qp = q_idx * chunk + jnp.arange(chunk)
+
+        def kv_body(carry, kv_xs):
+            m_run, l_run, acc = carry
+            ki, vi, kv_idx = kv_xs
+            kp = kv_idx * kvc + jnp.arange(kvc)
+            s = _gqa_scores(qi, ki) * scale                    # (B,KV,G,qc,kvc)
+            if causal:
+                mask = _causal_mask(qp, kp, window)[None, None, None]
+            else:
+                mask = jnp.ones((1, 1, 1, chunk, kvc), bool)
+            s = jnp.where(mask, s, _NEG_INF)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m_run - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l_run * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bskh->bkgqh", p, vi.astype(p.dtype)
+            )
+            return (m_new, l_new, acc), 0.0
+
+        m0 = jnp.full((b, kvh, g, chunk), _NEG_INF)
+        l0 = jnp.zeros((b, kvh, g, chunk))
+        a0 = jnp.zeros((b, kvh, g, chunk, hd))
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            kv_body, (m0, l0, a0), (ks, vs, jnp.arange(n_kv))
+        )
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]         # (B,KV,G,qc,hd)
+        return 0, out.transpose(0, 3, 1, 2, 4)                 # (B,qc,KV,G,hd)
+
+    _, outs = jax.lax.scan(q_body, 0, (qs, jnp.arange(n_q)))
+    return outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, kvh, g, hd)
+
+
+# ---------------------------------------------------------------------------
+# public entry
+# ---------------------------------------------------------------------------
+def attention(
+    p,
+    x: jax.Array,                      # (B, S, d)
+    cfg: ModelConfig,
+    *,
+    positions: Optional[jax.Array] = None,
+    kv_x: Optional[jax.Array] = None,  # cross-attention source
+    causal: bool = True,
+    window: int = 0,
+    cache: Optional[KVCache] = None,
+    cache_update: bool = True,
+    q_chunk: int = 1024,
+    rope: bool = True,
+) -> Tuple[jax.Array, Optional[KVCache]]:
+    """Unified attention.  Modes:
+
+    * training/prefill: ``cache is None`` or prefill-populates the cache;
+    * decode: ``x`` is (B, 1, d) and ``cache.length`` marks the write slot;
+    * cross: ``kv_x`` given ⇒ non-causal, no rope, cache holds kv_x keys.
+    """
+    b, s, d = x.shape
+    kvsrc = kv_x if kv_x is not None else x
+    is_cross = kv_x is not None
+
+    q = x @ p["wq"]
+    if "bq" in p:
+        q = q + p["bq"]
+    q = shard_hint(q, "act_batch", None, "act_heads")
+    q = _split_heads(q, cfg.num_heads, cfg.head_dim)
+
+    decode = cache is not None and s == 1 and not is_cross
+    reuse_cross = is_cross and cache is not None and cache_update is False
+
+    if reuse_cross:
+        k_f, v_f = cache.k, cache.v
+    else:
+        k_f = kvsrc @ p["wk"]
+        v_f = kvsrc @ p["wv"]
+        if "bk" in p:
+            k_f, v_f = k_f + p["bk"], v_f + p["bv"]
+        k_f = shard_hint(k_f, "act_batch", None, "act_kv")
+        v_f = shard_hint(v_f, "act_batch", None, "act_kv")
+
+    kvh, hd = cfg.num_kv_heads, cfg.head_dim
+    k = k_f.reshape(b, -1, kvh, hd)
+    v = v_f.reshape(b, -1, kvh, hd)
+    qh = q  # (B,S,H,hd)
+    if cfg.qk_norm:
+        qh = rms_norm(qh, p["q_norm"], cfg.norm_eps)
+        if not reuse_cross:
+            k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+
+    if positions is None:
+        if decode:
+            positions = cache.length[:, None]
+        else:
+            positions = jnp.arange(s)[None, :]
+    if rope and cfg.rope_theta and not is_cross:
+        qh = apply_rope(qh, positions, cfg.rope_theta)
+        if not reuse_cross:
+            k = apply_rope(k, positions, cfg.rope_theta)
+
+    g = cfg.num_heads // max(cfg.num_kv_heads, 1)
+    qg = qh.reshape(b, s, kvh, g, hd)
+
+    new_cache = cache
+    if decode:
+        # per-sequence write slots (continuous batching: every slot has its
+        # own horizon); rolling for windowed caches
+        cache_len = cache.k.shape[1]
+        slot = cache.length % cache_len if window else cache.length    # (B,)
+        rows = jnp.arange(b)
+        kf_new = cache.k.at[rows, slot].set(
+            k.reshape(b, kvh * hd).astype(cache.k.dtype)
+        )
+        vf_new = cache.v.at[rows, slot].set(
+            v.reshape(b, kvh * hd).astype(cache.v.dtype)
+        )
+        new_cache = KVCache(kf_new, vf_new, cache.length + 1)
+        k_all = kf_new.reshape(b, cache_len, kvh, hd)
+        v_all = vf_new.reshape(b, cache_len, kvh, hd)
+        # mask: valid cached positions only, per sequence
+        kp = jnp.arange(cache_len)[None, :]                            # (1, Sk)
+        if window:
+            valid = kp < jnp.minimum(cache.length + 1, cache_len)[:, None]
+        else:
+            valid = kp <= cache.length[:, None]                        # (B, Sk)
+        scores = _gqa_scores(qg, k_all) * (hd**-0.5)
+        w = _softmax(scores, valid[:, None, None, None, :])
+        out = _gqa_out(w, v_all)
+    else:
+        if cache is not None and not is_cross and cache_update:
+            # prefill: populate cache with the (window-tail of) *processed*
+            # K/V — post qk-norm and post-RoPE, matching what decode writes.
+            k_proc = k.reshape(b, -1, kvh * hd)
+            cache_len = cache.k.shape[1]
+            if window and s > cache_len:
+                # rolling layout: token t lives at slot t % window, so the
+                # decode-time writer evicts the oldest token, not arbitrary.
+                k_tail = jnp.roll(k_proc[:, -cache_len:, :], s % cache_len, axis=1)
+                v_tail = jnp.roll(v_f[:, -cache_len:, :], s % cache_len, axis=1)
+            else:
+                k_tail, v_tail = k_proc, v_f
+            kf_new = jax.lax.dynamic_update_slice(
+                cache.k, k_tail.astype(cache.k.dtype), (0, 0, 0)
+            )
+            vf_new = jax.lax.dynamic_update_slice(
+                cache.v, v_tail.astype(cache.v.dtype), (0, 0, 0)
+            )
+            new_cache = KVCache(kf_new, vf_new, jnp.full((b,), s, jnp.int32))
+        elif is_cross and cache_update and cache is not None:
+            new_cache = KVCache(k_f.astype(cache.k.dtype), v_f.astype(cache.v.dtype),
+                                jnp.full((b,), k_f.shape[1], jnp.int32))
+        if s > q_chunk and s % q_chunk == 0:
+            out = _chunked_attention(qg, k, v, cfg, causal=causal and not is_cross,
+                                     window=window, chunk=q_chunk)
+        else:
+            out = _dense_attention(qg, k, v, cfg, causal=causal and not is_cross,
+                                   window=window)
+
+    out = out.reshape(b, s, cfg.q_dim).astype(x.dtype)
+    out = shard_hint(out, "act_batch", None, "act_heads")
+    y = out @ p["wo"]
+    if "bo" in p:
+        y = y + p["bo"]
+    return shard_hint(y, "act_batch", "act_seq", "act_embed"), new_cache

@@ -1,0 +1,223 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+Per the assignment, the conv frontend is a STUB: the model consumes
+precomputed frame embeddings (B, S_enc, d_model) from ``input_specs()``.
+LayerNorm + biased projections + GELU MLPs (whisper convention),
+sinusoidal encoder positions, learned decoder positions, no RoPE.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..parallel.mesh_rules import shard_hint
+from .attention import KVCache, abstract_kv_cache, attention, attention_params, init_kv_cache
+from .ffn import gelu_ffn, gelu_ffn_params
+from .layers import Builder, layer_norm, sinusoidal_positions
+from .transformer import _StackedBuilder, _zero_aux
+
+__all__ = [
+    "build_encdec_params",
+    "encoder_forward",
+    "decoder_forward_encdec",
+    "init_encdec_caches",
+    "abstract_encdec_caches",
+]
+
+MAX_DECODER_POS = 32768
+
+
+def _ln_params(b: Builder, name: str, d: int):
+    return {
+        "w": b.param(f"{name}_w", (d,), ("embed",), init="ones"),
+        "b": b.param(f"{name}_b", (d,), ("embed",), init="zeros"),
+    }
+
+
+def _enc_block_params(b: Builder, cfg: ModelConfig):
+    d = cfg.d_model
+    return {
+        "ln_attn": _ln_params(b, "ln_attn", d),
+        "attn": attention_params(b, cfg, bias=True),
+        "ln_mlp": _ln_params(b, "ln_mlp", d),
+        "mlp": gelu_ffn_params(b, d, cfg.d_ff),
+    }
+
+
+def _dec_block_params(b: Builder, cfg: ModelConfig):
+    d = cfg.d_model
+    return {
+        "ln_attn": _ln_params(b, "ln_attn", d),
+        "attn": attention_params(b, cfg, bias=True),
+        "ln_xattn": _ln_params(b, "ln_xattn", d),
+        "xattn": attention_params(b, cfg, bias=True),
+        "ln_mlp": _ln_params(b, "ln_mlp", d),
+        "mlp": gelu_ffn_params(b, d, cfg.d_ff),
+    }
+
+
+def build_encdec_params(b: Builder, cfg: ModelConfig):
+    d, v = cfg.d_model, cfg.padded_vocab
+    params: Dict[str, Any] = {}
+    with b.scope("embed"):
+        params["embed"] = b.param("table", (v, d), ("vocab", None), scale=0.02)
+        params["dec_pos"] = b.param(
+            "dec_pos", (MAX_DECODER_POS, d), (None, "embed"), scale=0.01
+        )
+    eb = _StackedBuilder(b, cfg.encoder_layers)
+    with b.scope("encoder"):
+        params["enc_blocks"] = _enc_block_params(eb, cfg)
+        params["enc_ln_out"] = _ln_params(b, "ln_out", d)
+    db = _StackedBuilder(b, cfg.num_layers)
+    with b.scope("decoder"):
+        params["dec_blocks"] = _dec_block_params(db, cfg)
+        params["dec_ln_out"] = _ln_params(b, "ln_out", d)
+    return params
+
+
+def _ln(x, p, cfg):
+    return layer_norm(x, p["w"], p["b"], cfg.norm_eps)
+
+
+def encoder_forward(params, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """frames: (B, S_enc, d) stub embeddings → encoder states."""
+    b_, s, d = frames.shape
+    x = frames + sinusoidal_positions(s, d).astype(frames.dtype)[None]
+    x = shard_hint(x, "act_batch", "act_seq", "act_embed")
+
+    def body(x, p):
+        h, _ = attention(p["attn"], _ln(x, p["ln_attn"], cfg), cfg,
+                         causal=False, rope=False)
+        x = x + h
+        x = x + gelu_ffn(p["mlp"], _ln(x, p["ln_mlp"], cfg))
+        return x, 0.0
+
+    if cfg.parallel.scan_layers:
+        body_fn = jax.checkpoint(body) if cfg.parallel.remat != "none" else body
+        x, _ = jax.lax.scan(body_fn, x, params["enc_blocks"])
+    else:
+        for i in range(cfg.encoder_layers):
+            p = jax.tree.map(lambda q: q[i], params["enc_blocks"])
+            x, _ = body(x, p)
+    return _ln(x, params["enc_ln_out"], cfg)
+
+
+def init_encdec_caches(cfg: ModelConfig, batch: int, max_len: int, enc_len: int):
+    L = cfg.num_layers
+
+    def stack(c):
+        return jax.tree.map(lambda x: jnp.stack([x] * L), c)
+
+    return {
+        "self": stack(init_kv_cache(cfg, batch, max_len)),
+        "cross": stack(init_kv_cache(cfg, batch, enc_len)),
+    }
+
+
+def abstract_encdec_caches(cfg: ModelConfig, batch: int, max_len: int, enc_len: int):
+    L = cfg.num_layers
+
+    def stack(c):
+        return jax.tree.map(lambda s: jax.ShapeDtypeStruct((L, *s.shape), s.dtype), c)
+
+    return {
+        "self": stack(abstract_kv_cache(cfg, batch, max_len)),
+        "cross": stack(abstract_kv_cache(cfg, batch, enc_len)),
+    }
+
+
+def encdec_cache_specs(cfg: ModelConfig, batch: int, max_len: int, enc_len: int):
+    from .attention import kv_cache_specs
+
+    def is_axes(x):
+        return isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x)
+
+    def stack(tree):
+        return jax.tree.map(lambda axes: (None, *axes), tree, is_leaf=is_axes)
+
+    return {"self": stack(kv_cache_specs(cfg)), "cross": stack(kv_cache_specs(cfg))}
+
+
+def decoder_forward_encdec(
+    params,
+    tokens: jax.Array,                # (B, S)
+    enc_out: jax.Array,               # (B, S_enc, d)
+    cfg: ModelConfig,
+    *,
+    mode: str = "train",
+    positions: Optional[jax.Array] = None,
+    caches=None,
+):
+    """Returns (hidden, new_caches, aux)."""
+    b_, s = tokens.shape
+    x = params["embed"][tokens]
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    pos_emb = params["dec_pos"][positions.reshape(-1)].reshape(b_ if positions.shape[0] == b_ else 1, s, -1)
+    x = x + pos_emb.astype(x.dtype)
+    x = shard_hint(x, "act_batch", "act_seq", "act_embed")
+    decode = mode == "decode"
+
+    def block(x, p, cache):
+        self_c = cache["self"] if cache is not None else None
+        cross_c = cache["cross"] if cache is not None else None
+        h, new_self = attention(p["attn"], _ln(x, p["ln_attn"], cfg), cfg,
+                                positions=positions, cache=self_c, rope=False)
+        x = x + h
+        h, new_cross = attention(p["xattn"], _ln(x, p["ln_xattn"], cfg), cfg,
+                                 kv_x=enc_out, causal=False, cache=cross_c,
+                                 cache_update=not decode, rope=False)
+        x = x + h
+        x = x + gelu_ffn(p["mlp"], _ln(x, p["ln_mlp"], cfg))
+        new_cache = {"self": new_self, "cross": new_cross} if cache is not None else None
+        return x, new_cache
+
+    if cfg.parallel.scan_layers:
+        has_cache = caches is not None
+        block_fn = jax.checkpoint(block) if cfg.parallel.remat != "none" else block
+        if has_cache:
+            # caches in the carry: in-place (aliased) layer updates
+            def body(carry, p):
+                x, bufs, i = carry
+                c = jax.tree.map(
+                    lambda b: jax.lax.dynamic_index_in_dim(b, i, 0, keepdims=False),
+                    bufs,
+                )
+                x, nc = block_fn(x, p, c)
+                bufs = jax.tree.map(
+                    lambda b, n: jax.lax.dynamic_update_index_in_dim(
+                        b, n.astype(b.dtype), i, 0
+                    ),
+                    bufs,
+                    nc,
+                )
+                return (x, bufs, i + 1), 0.0
+
+            (x, new_caches, _), _ = jax.lax.scan(
+                body, (x, caches, jnp.zeros((), jnp.int32)), params["dec_blocks"]
+            )
+        else:
+
+            def body(carry, p):
+                x, _ = block_fn(carry, p, None)
+                return x, 0.0
+
+            x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+            new_caches = None
+    else:
+        new_list = [] if caches is not None else None
+        for i in range(cfg.num_layers):
+            p = jax.tree.map(lambda q: q[i], params["dec_blocks"])
+            c = jax.tree.map(lambda q: q[i], caches) if caches is not None else None
+            x, nc = block(x, p, c)
+            if caches is not None:
+                new_list.append(nc)
+        new_caches = (
+            jax.tree.map(lambda *xs: jnp.stack(xs), *new_list) if caches is not None else None
+        )
+    x = _ln(x, params["dec_ln_out"], cfg)
+    return x, new_caches, _zero_aux()

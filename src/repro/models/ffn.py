@@ -1,0 +1,44 @@
+"""Feed-forward blocks: SwiGLU (llama family) and GELU (whisper)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..parallel.mesh_rules import shard_hint
+from .layers import Builder
+
+__all__ = ["ffn_params", "ffn", "gelu_ffn_params", "gelu_ffn"]
+
+
+def ffn_params(b: Builder, d: int, ff: int):
+    """SwiGLU: gate (w1), up (w3), down (w2)."""
+    return {
+        "w1": b.param("w1", (d, ff), ("embed", "mlp")),
+        "w3": b.param("w3", (d, ff), ("embed", "mlp")),
+        "w2": b.param("w2", (ff, d), ("mlp", "embed")),
+    }
+
+
+def ffn(p, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])
+    h = shard_hint(h, "act_batch", None, "act_mlp")
+    y = h @ p["w2"]
+    return shard_hint(y, "act_batch", "act_seq", "act_embed")
+
+
+def gelu_ffn_params(b: Builder, d: int, ff: int):
+    return {
+        "w1": b.param("w1", (d, ff), ("embed", "mlp")),
+        "b1": b.param("b1", (ff,), ("mlp",), init="zeros"),
+        "w2": b.param("w2", (ff, d), ("mlp", "embed")),
+        "b2": b.param("b2", (d,), ("embed",), init="zeros"),
+    }
+
+
+def gelu_ffn(p, x: jax.Array) -> jax.Array:
+    h = jax.nn.gelu(x @ p["w1"] + p["b1"])
+    h = shard_hint(h, "act_batch", None, "act_mlp")
+    y = h @ p["w2"] + p["b2"]
+    return shard_hint(y, "act_batch", "act_seq", "act_embed")

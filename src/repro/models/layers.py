@@ -1,0 +1,200 @@
+"""Shared model primitives + the parameter builder.
+
+One ``build`` function per model family constructs parameters through a
+:class:`Builder`, which produces — from the *same* code path — either real
+initialized arrays (:class:`ArrayBuilder`), ``ShapeDtypeStruct`` stand-ins
+for dry-run lowering (:class:`AbstractBuilder`), or logical-axis
+PartitionSpecs (:class:`SpecBuilder`).  This guarantees the param tree, its
+abstract shapes, and its sharding specs can never drift apart.
+"""
+
+from __future__ import annotations
+
+import math
+from contextlib import contextmanager
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Builder",
+    "ArrayBuilder",
+    "AbstractBuilder",
+    "SpecBuilder",
+    "rms_norm",
+    "layer_norm",
+    "apply_rope",
+    "sinusoidal_positions",
+    "cross_entropy_loss",
+    "DTYPES",
+]
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}
+
+
+# ---------------------------------------------------------------------------
+# parameter builder
+# ---------------------------------------------------------------------------
+class Builder:
+    """Records a path scope; subclasses decide what a leaf is."""
+
+    def __init__(self) -> None:
+        self._scope: list[str] = []
+
+    @contextmanager
+    def scope(self, name: str):
+        self._scope.append(name)
+        try:
+            yield self
+        finally:
+            self._scope.pop()
+
+    @property
+    def path(self) -> str:
+        return "/".join(self._scope)
+
+    def param(
+        self,
+        name: str,
+        shape: Sequence[int],
+        axes: Sequence[Optional[str]],
+        *,
+        init: str = "normal",
+        scale: Optional[float] = None,
+        dtype: Optional[Any] = None,
+    ):
+        raise NotImplementedError
+
+
+class ArrayBuilder(Builder):
+    """Real initialization.  Deterministic: the key for each param is the
+    root key folded with a stable hash of its path, so adding params never
+    reshuffles others."""
+
+    def __init__(self, key: jax.Array, param_dtype) -> None:
+        super().__init__()
+        self.key = key
+        self.param_dtype = param_dtype
+
+    def _key_for(self, path: str) -> jax.Array:
+        h = 0
+        for ch in path:
+            h = (h * 131 + ord(ch)) % (2**31 - 1)
+        return jax.random.fold_in(self.key, h)
+
+    def param(self, name, shape, axes, *, init="normal", scale=None, dtype=None):
+        dtype = dtype or self.param_dtype
+        path = f"{self.path}/{name}"
+        if init == "normal":
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            std = scale if scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+            x = jax.random.normal(self._key_for(path), tuple(shape), jnp.float32) * std
+        elif init == "zeros":
+            x = jnp.zeros(tuple(shape), jnp.float32)
+        elif init == "ones":
+            x = jnp.ones(tuple(shape), jnp.float32)
+        elif init == "constant":
+            x = jnp.full(tuple(shape), scale, jnp.float32)
+        elif init == "uniform":  # U[scale0, scale1] packed in scale tuple
+            lo, hi = scale  # type: ignore[misc]
+            u = jax.random.uniform(self._key_for(path), tuple(shape), jnp.float32)
+            x = lo + (hi - lo) * u
+        else:
+            raise ValueError(f"unknown init {init!r}")
+        return x.astype(dtype)
+
+
+class AbstractBuilder(Builder):
+    """ShapeDtypeStruct leaves — zero allocation, for .lower() dry-runs."""
+
+    def __init__(self, param_dtype) -> None:
+        super().__init__()
+        self.param_dtype = param_dtype
+
+    def param(self, name, shape, axes, *, init="normal", scale=None, dtype=None):
+        return jax.ShapeDtypeStruct(tuple(shape), dtype or self.param_dtype)
+
+
+class SpecBuilder(Builder):
+    """Logical-axis tuples; resolved to PartitionSpec by parallel/mesh_rules."""
+
+    def __init__(self) -> None:
+        super().__init__()
+
+    def param(self, name, shape, axes, *, init="normal", scale=None, dtype=None):
+        if len(axes) != len(shape):
+            raise ValueError(
+                f"param {self.path}/{name}: {len(shape)}-d shape with "
+                f"{len(axes)} logical axes {axes}"
+            )
+        return tuple(axes)
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def _rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) or (S,).  Split-half convention."""
+    b, s, h, d = x.shape
+    freqs = _rope_freqs(d, theta)                      # (d/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,d/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int) -> jax.Array:
+    """Whisper-style sinusoidal embeddings (frames, d)."""
+    half = d // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1))
+    ang = jnp.arange(seq, dtype=jnp.float32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def cross_entropy_loss(
+    logits: jax.Array,        # (..., V) any float dtype
+    labels: jax.Array,        # (...) int32
+    mask: Optional[jax.Array] = None,
+    *,
+    z_loss: float = 0.0,
+) -> Tuple[jax.Array, jax.Array]:
+    """Mean token NLL in fp32 (+ optional z-loss); returns (loss, denom)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    picked = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - picked
+    if z_loss:
+        nll = nll + z_loss * lse**2
+    if mask is not None:
+        m = mask.astype(jnp.float32)
+        denom = jnp.maximum(jnp.sum(m), 1.0)
+        return jnp.sum(nll * m) / denom, denom
+    denom = jnp.asarray(nll.size, jnp.float32)
+    return jnp.mean(nll), denom

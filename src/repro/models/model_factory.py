@@ -1,0 +1,209 @@
+"""Model factory: one uniform API over all assigned architectures.
+
+``Model`` bundles init / abstract params / sharding specs / forward /
+loss / serve steps for a :class:`~repro.configs.base.ModelConfig`.  The
+same object drives training (`examples/train_small.py`), serving
+(`serving/engine.py`), and the multi-pod dry-run (`launch/dryrun.py`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import InputShape, ModelConfig
+from ..parallel.mesh_rules import shard_hint
+from . import encdec, transformer
+from .layers import AbstractBuilder, ArrayBuilder, DTYPES, SpecBuilder, cross_entropy_loss
+
+__all__ = ["Model", "make_model"]
+
+MOE_AUX_COEF = 0.01
+MOE_Z_COEF = 1e-3
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------------
+    # parameters
+    # ------------------------------------------------------------------
+    def _build(self, builder):
+        if self.cfg.family == "encdec":
+            return encdec.build_encdec_params(builder, self.cfg)
+        return transformer.build_decoder_params(builder, self.cfg)
+
+    def init(self, key: jax.Array):
+        return self._build(ArrayBuilder(key, DTYPES[self.cfg.param_dtype]))
+
+    def abstract_params(self):
+        return self._build(AbstractBuilder(DTYPES[self.cfg.param_dtype]))
+
+    def param_specs(self):
+        return self._build(SpecBuilder())
+
+    # ------------------------------------------------------------------
+    # forward
+    # ------------------------------------------------------------------
+    def forward(self, params, batch: Dict[str, jax.Array], *, mode: str = "train",
+                caches=None):
+        """Returns (hidden (B,S,d), new_caches, aux)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        positions = batch.get("positions")
+        if cfg.family == "encdec":
+            if mode == "decode":
+                b_ = tokens.shape[0]
+                enc_out = jnp.zeros((b_, 1, cfg.d_model), DTYPES[cfg.dtype])
+            else:
+                enc_out = encdec.encoder_forward(params, batch["frames"], cfg)
+            return encdec.decoder_forward_encdec(
+                params, tokens, enc_out, cfg, mode=mode, positions=positions,
+                caches=caches,
+            )
+        img = batch.get("image_embeds")
+        if cfg.family == "vlm" and img is None and mode == "decode":
+            img = jnp.zeros((tokens.shape[0], 1, cfg.d_model), DTYPES[cfg.dtype])
+        ctx = transformer.Context(mode=mode, positions=positions, img_embeds=img)
+        return transformer.decoder_forward(params, tokens, cfg, ctx, caches)
+
+    def logits(self, params, hidden):
+        if self.cfg.family == "encdec":
+            return hidden @ params["embed"].T
+        return transformer.lm_logits(params, hidden, self.cfg)
+
+    # ------------------------------------------------------------------
+    # training loss (chunked over sequence: never materializes full logits)
+    # ------------------------------------------------------------------
+    def loss_fn(self, params, batch, *, loss_chunk: int = 1024):
+        cfg = self.cfg
+        hidden, _, aux = self.forward(params, batch, mode="train")
+        labels = batch["labels"]
+        mask = batch.get("mask")
+        b_, s, d = hidden.shape
+
+        head = params["embed"].T if (cfg.tie_embeddings or cfg.family == "encdec") \
+            else params["lm_head"]
+
+        if loss_chunk and s > loss_chunk and s % loss_chunk == 0:
+            nc = s // loss_chunk
+            hs = hidden.reshape(b_, nc, loss_chunk, d).transpose(1, 0, 2, 3)
+            ls = labels.reshape(b_, nc, loss_chunk).transpose(1, 0, 2)
+            ms = (
+                mask.reshape(b_, nc, loss_chunk).transpose(1, 0, 2)
+                if mask is not None
+                else jnp.ones((nc, b_, loss_chunk), jnp.float32)
+            )
+
+            def body(acc, xs):
+                h, l, m = xs
+                logits = h @ head
+                lf = logits.astype(jnp.float32)
+                lse = jax.nn.logsumexp(lf, axis=-1)
+                picked = jnp.take_along_axis(lf, l[..., None], axis=-1)[..., 0]
+                nll = (lse - picked) * m
+                return (acc[0] + jnp.sum(nll), acc[1] + jnp.sum(m)), 0.0
+
+            (tot, denom), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())), (hs, ls, ms))
+            loss = tot / jnp.maximum(denom, 1.0)
+        else:
+            logits = self.logits(params, hidden)
+            loss, denom = cross_entropy_loss(logits, labels, mask)
+
+        metrics = {"ce_loss": loss, **aux}
+        if cfg.family == "moe":
+            loss = loss + MOE_AUX_COEF * aux["moe_aux_loss"] + MOE_Z_COEF * aux["moe_z_loss"]
+        metrics["loss"] = loss
+        return loss, metrics
+
+    # ------------------------------------------------------------------
+    # serving
+    # ------------------------------------------------------------------
+    def init_caches(self, batch: int, max_len: int):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return encdec.init_encdec_caches(cfg, batch, max_len, cfg.encoder_seq)
+        return transformer.init_caches(cfg, batch, max_len)
+
+    def abstract_caches(self, batch: int, max_len: int):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return encdec.abstract_encdec_caches(cfg, batch, max_len, cfg.encoder_seq)
+        return transformer.abstract_caches(cfg, batch, max_len)
+
+    def cache_specs(self, batch: int, max_len: int):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return encdec.encdec_cache_specs(cfg, batch, max_len, cfg.encoder_seq)
+        return transformer.cache_specs(cfg, batch, max_len)
+
+    def prefill(self, params, batch, max_len: int):
+        """Full-sequence prefill → (last-position logits, populated caches)."""
+        b_ = batch["tokens"].shape[0]
+        caches = self.init_caches(b_, max_len)
+        hidden, caches, _ = self.forward(params, batch, mode="prefill", caches=caches)
+        return self.logits(params, hidden[:, -1:, :])[:, 0, :], caches
+
+    def prefill_from(self, params, batch, caches):
+        hidden, caches, _ = self.forward(params, batch, mode="prefill", caches=caches)
+        return self.logits(params, hidden[:, -1:, :])[:, 0, :], caches
+
+    def decode_step(self, params, tokens, positions, caches):
+        """tokens: (B,1) → (logits (B,V), new_caches)."""
+        batch = {"tokens": tokens, "positions": positions}
+        hidden, caches, _ = self.forward(batch=batch, params=params, mode="decode",
+                                         caches=caches)
+        return self.logits(params, hidden)[:, 0, :], caches
+
+    # ------------------------------------------------------------------
+    # dry-run inputs (ShapeDtypeStruct stand-ins, no allocation)
+    # ------------------------------------------------------------------
+    def input_specs(self, shape: InputShape) -> Dict[str, Any]:
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        act = DTYPES[cfg.dtype]
+        sds = jax.ShapeDtypeStruct
+        if shape.kind == "train":
+            batch = {
+                "tokens": sds((B, S), i32),
+                "labels": sds((B, S), i32),
+                "mask": sds((B, S), jnp.float32),
+            }
+            if cfg.family == "encdec":
+                batch["frames"] = sds((B, cfg.encoder_seq, cfg.d_model), act)
+            if cfg.family == "vlm":
+                batch["image_embeds"] = sds((B, cfg.num_image_tokens, cfg.d_model), act)
+            return {"batch": batch}
+        if shape.kind == "prefill":
+            batch = {"tokens": sds((B, S), i32)}
+            if cfg.family == "encdec":
+                batch["frames"] = sds((B, cfg.encoder_seq, cfg.d_model), act)
+            if cfg.family == "vlm":
+                batch["image_embeds"] = sds((B, cfg.num_image_tokens, cfg.d_model), act)
+            return {"batch": batch}
+        # decode: one new token against a seq_len-sized cache
+        return {
+            "tokens": sds((B, 1), i32),
+            "positions": sds((B, 1), i32),
+            "caches": self.abstract_caches(B, S),
+        }
+
+    # ------------------------------------------------------------------
+    # analytic costs (for the roofline's MODEL_FLOPS row)
+    # ------------------------------------------------------------------
+    def model_flops(self, shape: InputShape) -> float:
+        n = self.cfg.active_param_count()
+        tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+        if shape.kind == "train":
+            return 6.0 * n * tokens
+        return 2.0 * n * tokens
+
+
+def make_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

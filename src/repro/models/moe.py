@@ -1,0 +1,262 @@
+"""Mixture-of-Experts layer with ENEAC capacity-chunk dispatch.
+
+The routing plan comes from :mod:`repro.core.moe_dispatch`: experts are the
+accelerators (fixed ``capacity`` chunk each), the shared fallback FFN is the
+CPU-core path absorbing overflow.  Expert weights are annotated with
+logical axes so the mesh rules pick expert-parallelism when the expert
+count divides the model axis (qwen3-moe: 128/16) and fall back to
+tensor-parallel expert FFNs otherwise (grok-1: 8 experts).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..core import moe_dispatch as md
+from ..parallel.mesh_rules import shard_hint
+from .layers import Builder
+from .ffn import ffn, ffn_params
+
+__all__ = ["moe_params", "moe_ffn", "moe_capacity"]
+
+
+def moe_capacity(cfg: ModelConfig, tokens: int) -> int:
+    """Static per-expert chunk (the ACC chunk size) for `tokens` per step."""
+    c = int(cfg.parallel.capacity_factor * tokens * cfg.experts_per_token / cfg.num_experts)
+    # round up to an MXU-friendly multiple
+    return max(8, ((c + 7) // 8) * 8)
+
+
+def moe_params(b: Builder, cfg: ModelConfig):
+    d = cfg.d_model
+    eff = cfg.moe_d_ff or cfg.d_ff
+    E = cfg.num_experts
+    p = {
+        "router": b.param("router", (d, E), ("embed", None), scale=0.02),
+        "w1": b.param("w1", (E, d, eff), ("experts", "expert_embed", "expert_mlp")),
+        "w3": b.param("w3", (E, d, eff), ("experts", "expert_embed", "expert_mlp")),
+        "w2": b.param("w2", (E, eff, d), ("experts", "expert_mlp", "expert_embed")),
+    }
+    if cfg.parallel.moe_fallback:
+        with b.scope("fallback"):
+            p["fallback"] = ffn_params(b, d, eff)
+    return p
+
+
+def _expert_ffn(p, xe: jax.Array) -> jax.Array:
+    """xe: (E, C, d) → (E, C, d), batched SwiGLU over experts (MXU path).
+
+    Sharding: experts over the model axis where divisible (EP), capacity
+    chunks over the DP axes always — expert weights are FSDP+TP sharded,
+    so the partitioner all-gathers weights (normal FSDP) while tokens stay
+    distributed.
+    """
+    xe = shard_hint(xe, "act_experts", "act_capacity", None)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["w1"])) * jnp.einsum(
+        "ecd,edf->ecf", xe, p["w3"]
+    )
+    # ff stays tensor-parallel when the expert dim couldn't take the model
+    # axis (grok: 8 experts vs 16) — act_mlp resolves to None automatically
+    # when "model" is already consumed by act_experts (qwen3-moe).
+    h = shard_hint(h, "act_experts", "act_capacity", "act_mlp")
+    out = jnp.einsum("ecf,efd->ecd", h, p["w2"])
+    return shard_hint(out, "act_experts", "act_capacity", None)
+
+
+def moe_ffn(p, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, dict]:
+    """x: (B, S, d) → (B, S, d), plus aux metrics/losses.
+
+    Two dispatch strategies (``cfg.parallel.moe_dispatch``):
+
+    * ``"gspmd"`` — global sort-based dispatch under pjit; the partitioner
+      derives the collectives.  Simple, but GSPMD materializes replicated
+      (E, C, d) buffers for the cross-shard gathers at 100B+ scale.
+    * ``"local"`` — shard_map per-DP-shard routing (production path): each
+      DP shard routes its own tokens with its own capacity chunk (exactly
+      one ENEAC worker per shard).  Activations are TP-replicated within a
+      model group, so each device serves the experts (or expert shards) it
+      owns and the combine reduces to the same psum a dense FFN needs —
+      zero extra collectives, zero cross-device scatters.
+    """
+    from ..parallel.mesh_rules import current_rules
+
+    rules = current_rules()
+    if cfg.parallel.moe_dispatch == "local" and rules is not None:
+        return _moe_ffn_local(p, x, cfg, rules)
+    b_, s_, d = x.shape
+    T = b_ * s_
+    xt = x.reshape(T, d)
+    xt = shard_hint(xt, "act_batch", None)         # tokens stay DP-sharded
+
+    router_logits = (xt.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    router_logits = shard_hint(router_logits, "act_batch", None)
+    routing = md.route_topk(router_logits, cfg.experts_per_token)
+    capacity = moe_capacity(cfg, T)
+    plan = md.make_dispatch_plan(
+        routing.expert_ids, routing.expert_probs, cfg.num_experts, capacity
+    )
+
+    xe = md.dispatch(xt, plan)                     # (E, C, d) — ACC chunks
+    xe = shard_hint(xe, "act_experts", "act_capacity", None)  # EP all-to-all
+    ye = _expert_ffn(p, xe)                        # expert (accelerator) path
+
+    if cfg.parallel.moe_fallback and "fallback" in p:
+        yf = ffn(p["fallback"], x).reshape(T, d)   # CC path: dense fallback
+    else:
+        yf = jnp.zeros_like(xt)                    # paper-less baseline: drop
+
+    out = md.combine(ye, yf, plan).reshape(b_, s_, d)
+    load, overflow = md.expert_load_stats(plan)
+    aux = {
+        "moe_aux_loss": routing.aux_loss,
+        "moe_z_loss": routing.router_z_loss,
+        "moe_overflow_frac": overflow,
+        "moe_load_max": jnp.max(load),
+    }
+    return out.astype(x.dtype), aux
+
+
+# ---------------------------------------------------------------------------
+# shard_map local dispatch (production path)
+# ---------------------------------------------------------------------------
+def _moe_ffn_local(p, x: jax.Array, cfg: ModelConfig, rules) -> Tuple[jax.Array, dict]:
+    from jax.sharding import PartitionSpec as P
+
+    from ..parallel.mesh_rules import hints_disabled
+
+    mesh = rules.mesh
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    model_ax = "model" if "model" in mesh.axis_names else None
+    E = cfg.num_experts
+    eff = cfg.moe_d_ff or cfg.d_ff
+    ep = bool(model_ax) and E % mesh.shape[model_ax] == 0  # expert parallel?
+
+    # progressive divisibility (a batch of 1 falls back to replication)
+    batch_spec = rules.spec(("act_batch", None, None), x.shape)
+
+    # weight specs mirror the true param shardings (from the mesh rules)
+    w_in_shape = (E, cfg.d_model, eff)
+    w_out_shape = (E, eff, cfg.d_model)
+    w_in_spec = rules.spec(("experts", "expert_embed", "expert_mlp"), w_in_shape)
+    w_out_spec = rules.spec(("experts", "expert_mlp", "expert_embed"), w_out_shape)
+    router_spec = P(None, None)
+    fb_specs = (
+        {
+            "w1": rules.spec(("embed", "mlp"), (cfg.d_model, eff)),
+            "w3": rules.spec(("embed", "mlp"), (cfg.d_model, eff)),
+            "w2": rules.spec(("mlp", "embed"), (eff, cfg.d_model)),
+        }
+        if cfg.parallel.moe_fallback and "fallback" in p
+        else None
+    )
+
+    def _regather(w, spec, axes_to_gather):
+        """Un-shard FSDP'd dims (standard per-layer weight gather)."""
+        for dim, entry in enumerate(spec):
+            if entry is None:
+                continue
+            names = entry if isinstance(entry, tuple) else (entry,)
+            for name in names:
+                if name in axes_to_gather:
+                    w = jax.lax.all_gather(w, name, axis=dim, tiled=True)
+        return w
+
+    fsdp_axes = set(dp_axes)
+
+    def local_fn(router_w, w1, w3, w2, fb, xb):
+        with hints_disabled():
+            bb, ss, d = xb.shape
+            T = bb * ss
+            xt = xb.reshape(T, d)
+            w1 = _regather(w1, w_in_spec, fsdp_axes)
+            w3 = _regather(w3, w_in_spec, fsdp_axes)
+            w2 = _regather(w2, w_out_spec, fsdp_axes)
+            if fb is not None:
+                fb = dict(fb)
+                fb["w1"] = _regather(fb["w1"], fb_specs["w1"], fsdp_axes)
+                fb["w3"] = _regather(fb["w3"], fb_specs["w3"], fsdp_axes)
+                fb["w2"] = _regather(fb["w2"], fb_specs["w2"], fsdp_axes)
+
+            logits = xt.astype(jnp.float32) @ router_w.astype(jnp.float32)
+            routing = md.route_topk(logits, cfg.experts_per_token)
+            capacity = moe_capacity(cfg, T)
+            plan = md.make_dispatch_plan(
+                routing.expert_ids, routing.expert_probs, E, capacity
+            )
+            # experts on this shard: all E (TP over ff) or the local slice (EP)
+            if ep:
+                e_loc = w1.shape[0]
+                idx = jax.lax.axis_index(model_ax)
+                lo = idx * e_loc
+                sub_plan = md.DispatchPlan(
+                    slot_token=jax.lax.dynamic_slice_in_dim(plan.slot_token, lo, e_loc, 0),
+                    slot_valid=jax.lax.dynamic_slice_in_dim(plan.slot_valid, lo, e_loc, 0),
+                    slot_index=plan.slot_index,
+                    expert_ids=plan.expert_ids,
+                    gate=plan.gate,
+                    overflow=plan.overflow,
+                    num_experts=e_loc,
+                    capacity=capacity,
+                )
+                xe = md.dispatch(xt, sub_plan)                      # (E_loc, C, d)
+            else:
+                xe = md.dispatch(xt, plan)                          # (E, C, d)
+            h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, w1)) * jnp.einsum(
+                "ecd,edf->ecf", xe, w3
+            )
+            ye = jnp.einsum("ecf,efd->ecd", h, w2)                  # partial if !ep
+
+            if fb is not None:
+                hf = jax.nn.silu(xt @ fb["w1"]) * (xt @ fb["w3"])
+                yf = hf @ fb["w2"]                                  # partial over model
+            else:
+                yf = jnp.zeros_like(xt)
+
+            # In both layouts each model shard holds a PARTIAL result —
+            # EP: only its experts' rows populated (fallback ff-sliced);
+            # TP: ff-partial sums for experts and fallback alike —
+            # so ONE psum over the model axis completes the combine.  This
+            # is the same collective a dense FFN needs: local dispatch adds
+            # zero extra communication.
+            if ep:
+                ye = _place_rows(ye, E, lo)
+            out = md.combine(ye, yf, plan)
+            if model_ax:
+                out = jax.lax.psum(out, model_ax)
+            load, overflow_frac = md.expert_load_stats(plan)
+            aux = (
+                routing.aux_loss,
+                routing.router_z_loss,
+                overflow_frac,
+                jnp.max(load),
+            )
+            if dp_axes:
+                aux = tuple(jax.lax.pmean(a, dp_axes) for a in aux)
+            return out.reshape(bb, ss, d).astype(xb.dtype), *aux
+
+    fb_arg = p.get("fallback") if fb_specs is not None else None
+    out, aux_l, z_l, ov, lm = jax.shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(router_spec, w_in_spec, w_in_spec, w_out_spec,
+                  fb_specs, batch_spec),
+        out_specs=(batch_spec, P(), P(), P(), P()),
+        check_vma=False,
+    )(p["router"], p["w1"], p["w3"], p["w2"], fb_arg, x)
+    aux = {
+        "moe_aux_loss": aux_l,
+        "moe_z_loss": z_l,
+        "moe_overflow_frac": ov,
+        "moe_load_max": lm,
+    }
+    return out, aux
+
+
+def _place_rows(ye: jax.Array, total: int, lo) -> jax.Array:
+    """Embed (E_loc, C, d) at row offset ``lo`` of a zero (E, C, d)."""
+    out = jnp.zeros((total, *ye.shape[1:]), ye.dtype)
+    return jax.lax.dynamic_update_slice_in_dim(out, ye, lo, axis=0)

@@ -1,0 +1,157 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrence:  a_t = exp(c · r_t · log σ(Λ))   (input-dependent decay)
+             h_t = a_t ⊙ h_{t-1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+Training/prefill evaluates the linear recurrence with
+``jax.lax.associative_scan`` (log-depth, TPU-friendly); decode is the O(1)
+single-step update — which is why recurrentgemma runs the long_500k cell.
+Gates use the paper's block-diagonal (8-block) projections.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..parallel.mesh_rules import shard_hint
+from .layers import Builder
+
+__all__ = ["rglru_params", "RGLRUState", "rglru_block", "init_rglru_state", "abstract_rglru_state"]
+
+_C = 8.0          # the paper's fixed exponent scale
+_N_BLOCKS = 8     # block-diagonal gate blocks
+
+
+class RGLRUState(NamedTuple):
+    conv: jax.Array   # (B, conv_width-1, lru_width)
+    h: jax.Array      # (B, lru_width) recurrent state (fp32)
+
+
+def _lw(cfg: ModelConfig) -> int:
+    return cfg.lru_width or cfg.d_model
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int):
+    lw = _lw(cfg)
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return RGLRUState(
+        conv=jnp.zeros((batch, cfg.conv_width - 1, lw), dt),
+        h=jnp.zeros((batch, lw), jnp.float32),
+    )
+
+
+def abstract_rglru_state(cfg: ModelConfig, batch: int):
+    lw = _lw(cfg)
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return RGLRUState(
+        conv=jax.ShapeDtypeStruct((batch, cfg.conv_width - 1, lw), dt),
+        h=jax.ShapeDtypeStruct((batch, lw), jnp.float32),
+    )
+
+
+def rglru_state_specs(cfg: ModelConfig, batch: int = 0):
+    return RGLRUState(conv=("act_batch", None, "act_mlp"), h=("act_batch", "act_mlp"))
+
+
+def rglru_params(b: Builder, cfg: ModelConfig):
+    d, lw, w = cfg.d_model, _lw(cfg), cfg.conv_width
+    blk = lw // _N_BLOCKS
+    return {
+        "w_x": b.param("w_x", (d, lw), ("embed", "lru")),
+        "w_gate": b.param("w_gate", (d, lw), ("embed", "lru")),
+        "w_out": b.param("w_out", (lw, d), ("lru", "embed")),
+        "conv_w": b.param("conv_w", (w, lw), (None, "conv_ch"), scale=0.1),
+        "conv_b": b.param("conv_b", (lw,), ("conv_ch",), init="zeros"),
+        # block-diagonal input/recurrence gates over the post-conv features
+        "gate_r_w": b.param("gate_r_w", (_N_BLOCKS, blk, blk), (None, None, None)),
+        "gate_r_b": b.param("gate_r_b", (lw,), ("lru",), init="zeros"),
+        "gate_i_w": b.param("gate_i_w", (_N_BLOCKS, blk, blk), (None, None, None)),
+        "gate_i_b": b.param("gate_i_b", (lw,), ("lru",), init="zeros"),
+        # Λ init so that a = σ(Λ)^c lands in [0.9, 0.999]
+        "lam": b.param("lam", (lw,), ("lru",), init="uniform", scale=(0.9, 4.0)),
+    }
+
+
+def _blockdiag(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x: (..., lw), w: (nb, blk, blk) → (..., lw)."""
+    nb, blk, _ = w.shape
+    xs = x.reshape(*x.shape[:-1], nb, blk)
+    y = jnp.einsum("...nb,nbc->...nc", xs, w)
+    return y.reshape(*x.shape[:-1], nb * blk) + b
+
+
+def _causal_conv(x, w, b):
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros(x.shape, jnp.float32)
+    for i in range(W):
+        out = out + xp[:, i : i + x.shape[1], :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _gates(p, xc: jax.Array):
+    """log_a (fp32, ≤0) and gated input multiplier from post-conv features."""
+    r = jax.nn.sigmoid(_blockdiag(xc, p["gate_r_w"], p["gate_r_b"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(_blockdiag(xc, p["gate_i_w"], p["gate_i_b"]).astype(jnp.float32))
+    log_a = _C * r * jax.nn.log_sigmoid(p["lam"].astype(jnp.float32))
+    return log_a, i
+
+
+def rglru_block(
+    p,
+    x: jax.Array,                     # (B, S, d)
+    cfg: ModelConfig,
+    *,
+    state: Optional[RGLRUState] = None,
+    decode: bool = False,
+) -> Tuple[jax.Array, Optional[RGLRUState]]:
+    b, s, d = x.shape
+    lw = _lw(cfg)
+
+    xb = x @ p["w_x"]
+    xb = shard_hint(xb, "act_batch", None, "act_mlp")
+    gate = jax.nn.gelu((x @ p["w_gate"]).astype(jnp.float32))
+
+    if decode:
+        assert state is not None and s == 1
+        window = jnp.concatenate([state.conv, xb], axis=1)
+        xc = jnp.einsum(
+            "bwc,wc->bc", window.astype(jnp.float32), p["conv_w"].astype(jnp.float32)
+        ) + p["conv_b"].astype(jnp.float32)
+        new_conv = window[:, 1:, :]
+        log_a, i_g = _gates(p, xc)
+        a = jnp.exp(log_a)
+        beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+        h_new = a * state.h + beta * (i_g * xc)
+        y = h_new[:, None, :]
+        new_state = RGLRUState(conv=new_conv.astype(state.conv.dtype), h=h_new)
+    else:
+        xc = _causal_conv(xb, p["conv_w"], p["conv_b"]).astype(jnp.float32)
+        log_a, i_g = _gates(p, xc)
+        a = jnp.exp(log_a)
+        beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+        bterm = beta * (i_g * xc)                          # (B,S,lw)
+        if state is not None:
+            # fold carried state into the first step's additive term
+            bterm = bterm.at[:, 0, :].add(a[:, 0, :] * state.h)
+
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, ar * bl + br
+
+        _, hs = jax.lax.associative_scan(combine, (a, bterm), axis=1)
+        y = hs
+        new_state = None
+        if state is not None:
+            new_state = RGLRUState(
+                conv=xb[:, -(cfg.conv_width - 1):, :].astype(state.conv.dtype),
+                h=hs[:, -1, :],
+            )
+
+    out = (gate * y).astype(x.dtype) @ p["w_out"]
+    return shard_hint(out, "act_batch", "act_seq", "act_embed"), new_state

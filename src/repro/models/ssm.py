@@ -1,0 +1,215 @@
+"""Mamba2 / SSD (state-space duality) block — arXiv:2405.21060.
+
+Training/prefill uses the *chunked* SSD algorithm: the sequence is split
+into chunks of ``cfg.ssm_chunk``; each chunk computes a quadratic
+(attention-like, MXU-friendly) intra-chunk term plus a rank-decomposed
+inter-chunk term carried by a sequential scan over chunk summaries.  This
+is the TPU-native formulation: the intra-chunk einsums are dense
+(chunk × chunk)·(chunk × head_dim) matmuls that tile onto the MXU, and the
+inter-chunk scan carries only the (heads, head_dim, state) tensor.
+
+Decode carries the recurrent state directly: O(1) per token — which is why
+mamba2 runs the long_500k cell that full-attention archs must skip.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..parallel.mesh_rules import shard_hint
+from .layers import Builder, rms_norm
+
+__all__ = ["ssd_params", "SSMState", "ssd_block", "init_ssm_state", "abstract_ssm_state"]
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array   # (B, conv_width-1, d_inner + 2*state) rolling conv inputs
+    h: jax.Array      # (B, heads, head_dim, state) recurrent state
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int):
+    di, n = cfg.ssm_d_inner, cfg.ssm_state
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return SSMState(
+        conv=jnp.zeros((batch, cfg.conv_width - 1, di + 2 * n), dt),
+        h=jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, n), jnp.float32),
+    )
+
+
+def abstract_ssm_state(cfg: ModelConfig, batch: int):
+    di, n = cfg.ssm_d_inner, cfg.ssm_state
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return SSMState(
+        conv=jax.ShapeDtypeStruct((batch, cfg.conv_width - 1, di + 2 * n), dt),
+        h=jax.ShapeDtypeStruct((batch, cfg.ssm_heads, cfg.ssm_head_dim, n), jnp.float32),
+    )
+
+
+def ssm_state_specs(cfg: ModelConfig, batch: int = 0):
+    return SSMState(
+        conv=("act_batch", None, "act_mlp"),
+        h=("act_batch", None, None, None),
+    )
+
+
+def ssd_params(b: Builder, cfg: ModelConfig):
+    d, di, n, nh, w = (
+        cfg.d_model,
+        cfg.ssm_d_inner,
+        cfg.ssm_state,
+        cfg.ssm_heads,
+        cfg.conv_width,
+    )
+    return {
+        # z (gate), x, B, C, dt — one fused projection, mamba2-style
+        "in_proj": b.param("in_proj", (d, 2 * di + 2 * n + nh), ("embed", "ssm_inner")),
+        "conv_w": b.param("conv_w", (w, di + 2 * n), (None, "conv_ch"), scale=0.1),
+        "conv_b": b.param("conv_b", (di + 2 * n,), ("conv_ch",), init="zeros"),
+        "A_log": b.param("A_log", (nh,), ("ssm_heads",), init="uniform", scale=(0.0, 1.5)),
+        "D": b.param("D", (nh,), ("ssm_heads",), init="ones"),
+        "dt_bias": b.param("dt_bias", (nh,), ("ssm_heads",), init="uniform", scale=(-4.6, -2.3)),
+        "norm": b.param("norm", (di,), ("ssm_inner",), init="zeros"),
+        "out_proj": b.param("out_proj", (di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv: x (B,S,C), w (W,C) → (B,S,C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(W):  # W is tiny (4): unrolled taps fuse into one kernel
+        out = out + xp[:, i : i + x.shape[1], :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    di, n, nh = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di : 2 * di + 2 * n]
+    dt = zxbcdt[..., 2 * di + 2 * n :]
+    return z, xBC, dt
+
+
+def _ssd_chunked(x, log_a, Bm, Cm, chunk: int, h0: Optional[jax.Array] = None):
+    """Chunked SSD scan.
+
+    x: (B,S,H,P) already scaled by dt;  log_a: (B,S,H) = dt·A (negative);
+    Bm, Cm: (B,S,N).  Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    s_orig = s
+    if s % chunk:
+        # pad: log_a=0 (decay 1) and B=0 ⇒ padding never touches the state
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        s = s + pad
+    nc = s // chunk
+    xr = x.reshape(b, nc, chunk, h, p)
+    ar = log_a.reshape(b, nc, chunk, h)
+    Br = Bm.reshape(b, nc, chunk, n)
+    Cr = Cm.reshape(b, nc, chunk, n)
+
+    a_cs = jnp.cumsum(ar, axis=2)                                    # (b,nc,Q,h)
+    # intra-chunk: L[i,j] = exp(cs_i - cs_j) for i >= j
+    seg = a_cs[:, :, :, None, :] - a_cs[:, :, None, :, :]            # (b,nc,Q,Q,h)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    S = jnp.einsum("bcin,bcjn->bcij", Cr, Br)                        # (b,nc,Q,Q)
+    M = S[..., None] * L                                             # (b,nc,Q,Q,h)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", M, xr.astype(jnp.float32))
+
+    # chunk summary states: sum_j exp(cs_Q - cs_j) B_j ⊗ x_j
+    decay_out = jnp.exp(a_cs[:, :, -1:, :] - a_cs)                   # (b,nc,Q,h)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", Br, decay_out, xr.astype(jnp.float32))
+    chunk_decay = jnp.exp(a_cs[:, :, -1, :])                         # (b,nc,h)
+
+    def scan_fn(h_prev, inp):
+        st, dec = inp
+        return h_prev * dec[:, :, None, None] + st, h_prev
+
+    h_init = jnp.zeros((b, h, p, n), jnp.float32) if h0 is None else h0
+    h_final, h_prevs = jax.lax.scan(
+        scan_fn,
+        h_init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)                       # (b,nc,h,p,n)
+    y_inter = jnp.einsum("bcin,bcih,bchpn->bcihp", Cr, jnp.exp(a_cs), h_prevs)
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y[:, :s_orig], h_final
+
+
+def ssd_block(
+    p,
+    x: jax.Array,                       # (B, S, d)
+    cfg: ModelConfig,
+    *,
+    state: Optional[SSMState] = None,
+    decode: bool = False,
+) -> Tuple[jax.Array, Optional[SSMState]]:
+    b, s, d = x.shape
+    di, n, nh, hd = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+
+    zxbcdt = x @ p["in_proj"]
+    z, xBC, dt_raw = _split_proj(cfg, zxbcdt)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                     # (nh,) negative
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+
+    if decode:
+        assert state is not None and s == 1
+        window = jnp.concatenate([state.conv, xBC], axis=1)          # (B, W, C)
+        conv_out = jnp.einsum(
+            "bwc,wc->bc", window.astype(jnp.float32), p["conv_w"].astype(jnp.float32)
+        ) + p["conv_b"].astype(jnp.float32)
+        xBC_t = jax.nn.silu(conv_out)                                # (B, C)
+        new_conv = window[:, 1:, :]
+        xs = xBC_t[:, :di].reshape(b, nh, hd)
+        Bm = xBC_t[:, di : di + n]
+        Cm = xBC_t[:, di + n :]
+        dt_t = dt[:, 0]                                              # (B, nh)
+        decay = jnp.exp(dt_t * A[None, :])                           # (B, nh)
+        upd = jnp.einsum("bh,bn,bhp->bhpn", dt_t, Bm, xs.astype(jnp.float32))
+        h_new = state.h * decay[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", Cm, h_new)
+        y = y + p["D"].astype(jnp.float32)[None, :, None] * xs.astype(jnp.float32)
+        y = y.reshape(b, 1, di)
+        new_state = SSMState(conv=new_conv.astype(state.conv.dtype), h=h_new)
+    else:
+        xBC = jax.nn.silu(_causal_conv(xBC, p["conv_w"], p["conv_b"]).astype(jnp.float32)).astype(x.dtype)
+        xs = xBC[..., :di].reshape(b, s, nh, hd)
+        Bm = xBC[..., di : di + n].astype(jnp.float32)
+        Cm = xBC[..., di + n :].astype(jnp.float32)
+        x_dt = xs.astype(jnp.float32) * dt[..., None]                # fold dt into x
+        log_a = dt * A[None, None, :]                                # (B,S,nh)
+        h0 = state.h if state is not None else None
+        y, h_final = _ssd_chunked(x_dt, log_a, Bm, Cm, cfg.ssm_chunk, h0)
+        y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xs.astype(jnp.float32)
+        y = y.reshape(b, s, di)
+        new_state = None
+        if state is not None:  # prefill: hand decode the final state
+            # conv tail: last (W-1) pre-activation conv inputs
+            tail = xBC  # post-conv; decode needs pre-conv inputs — recompute:
+            new_state = SSMState(
+                conv=jax.lax.dynamic_slice_in_dim(
+                    (x @ p["in_proj"])[..., di : 2 * di + 2 * n],
+                    s - (cfg.conv_width - 1),
+                    cfg.conv_width - 1,
+                    axis=1,
+                ).astype(state.conv.dtype),
+                h=h_final,
+            )
+
+    y = rms_norm(
+        (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype), p["norm"], cfg.norm_eps
+    )
+    out = y @ p["out_proj"]
+    return shard_hint(out, "act_batch", "act_seq", "act_embed"), new_state

@@ -1,0 +1,421 @@
+"""Decoder-only transformer supporting every assigned family.
+
+A model is a *block pattern* repeated ``repeats`` times (+ an unrolled
+remainder), scanned with ``jax.lax.scan`` over stacked parameters — the
+production structure for 100-layer nets: HLO stays one-pattern-sized,
+compiles in seconds at 512 devices, and remat applies per pattern group.
+
+Patterns per family:
+  dense   ("attn",) × L
+  moe     ("moe",)  × L
+  ssm     ("ssd",)  × L
+  hybrid  ("rglru","rglru","attn") × 12  + remainder ("rglru","rglru")
+  vlm     ("attn",)×4 + ("cross",)  × (L/5)
+(whisper's encoder/decoder stacks live in encdec.py and reuse these blocks)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..parallel.mesh_rules import shard_hint
+from .attention import KVCache, abstract_kv_cache, attention, attention_params, init_kv_cache
+from .ffn import ffn, ffn_params, gelu_ffn, gelu_ffn_params
+from .layers import Builder, layer_norm, rms_norm
+from .moe import moe_ffn, moe_params
+from .rglru import abstract_rglru_state, init_rglru_state, rglru_block, rglru_params
+from .ssm import abstract_ssm_state, init_ssm_state, ssd_block, ssd_params
+
+__all__ = ["pattern_of", "build_decoder_params", "decoder_forward", "Context", "init_caches",
+           "abstract_caches", "AUX_KEYS"]
+
+AUX_KEYS = ("moe_aux_loss", "moe_z_loss", "moe_overflow_frac", "moe_load_max")
+
+
+@dataclasses.dataclass
+class Context:
+    mode: str                           # "train" | "prefill" | "decode"
+    positions: Optional[jax.Array] = None
+    img_embeds: Optional[jax.Array] = None   # (B, n_img, d) VLM stub input
+    enc_out: Optional[jax.Array] = None      # (B, S_enc, d) whisper decoder
+    max_len: int = 0                         # cache capacity for prefill
+
+
+def pattern_of(cfg: ModelConfig) -> Tuple[Tuple[str, ...], int, Tuple[str, ...]]:
+    if cfg.family == "dense":
+        pat: Tuple[str, ...] = ("attn",)
+    elif cfg.family == "moe":
+        pat = ("moe",)
+    elif cfg.family == "ssm":
+        pat = ("ssd",)
+    elif cfg.family == "hybrid":
+        pat = cfg.block_pattern or ("rglru", "rglru", "attn")
+    elif cfg.family == "vlm":
+        ce = cfg.cross_attn_every or 5
+        pat = ("attn",) * (ce - 1) + ("cross",)
+    else:
+        raise ValueError(f"pattern_of: unsupported family {cfg.family}")
+    repeats, rem = divmod(cfg.num_layers, len(pat))
+    return pat, repeats, pat[:rem]
+
+
+# ---------------------------------------------------------------------------
+# per-kind parameter builders
+# ---------------------------------------------------------------------------
+def _block_params(b: Builder, cfg: ModelConfig, kind: str):
+    d = cfg.d_model
+    if kind == "attn":
+        return {
+            "ln_attn": b.param("ln_attn", (d,), ("embed",), init="zeros"),
+            "attn": attention_params(b, cfg),
+            "ln_mlp": b.param("ln_mlp", (d,), ("embed",), init="zeros"),
+            "mlp": ffn_params(b, d, cfg.d_ff),
+        }
+    if kind == "moe":
+        return {
+            "ln_attn": b.param("ln_attn", (d,), ("embed",), init="zeros"),
+            "attn": attention_params(b, cfg),
+            "ln_mlp": b.param("ln_mlp", (d,), ("embed",), init="zeros"),
+            "moe": moe_params(b, cfg),
+        }
+    if kind == "ssd":
+        return {
+            "ln": b.param("ln", (d,), ("embed",), init="zeros"),
+            "ssd": ssd_params(b, cfg),
+        }
+    if kind == "rglru":
+        return {
+            "ln_rec": b.param("ln_rec", (d,), ("embed",), init="zeros"),
+            "rec": rglru_params(b, cfg),
+            "ln_mlp": b.param("ln_mlp", (d,), ("embed",), init="zeros"),
+            "mlp": ffn_params(b, d, cfg.d_ff),
+        }
+    if kind == "cross":
+        return {
+            "ln_attn": b.param("ln_attn", (d,), ("embed",), init="zeros"),
+            "attn": attention_params(b, cfg),
+            "ln_xattn": b.param("ln_xattn", (d,), ("embed",), init="zeros"),
+            "xattn": attention_params(b, cfg),
+            "gate_attn": b.param("gate_attn", (), (), init="zeros"),
+            "ln_mlp": b.param("ln_mlp", (d,), ("embed",), init="zeros"),
+            "mlp": ffn_params(b, d, cfg.d_ff),
+            "gate_mlp": b.param("gate_mlp", (), (), init="zeros"),
+        }
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+class _StackedBuilder(Builder):
+    """Proxy adding a leading ``stack`` dim to every param."""
+
+    def __init__(self, inner: Builder, n: int) -> None:
+        super().__init__()
+        self.inner = inner
+        self.n = n
+
+    def scope(self, name):
+        return self.inner.scope(name)
+
+    def param(self, name, shape, axes, **kw):
+        return self.inner.param(name, (self.n, *shape), ("stack", *axes), **kw)
+
+
+def build_decoder_params(b: Builder, cfg: ModelConfig):
+    pat, repeats, rem = pattern_of(cfg)
+    d, v = cfg.d_model, cfg.padded_vocab
+    params: Dict[str, Any] = {}
+    with b.scope("embed"):
+        # vocab-only sharding: a doubly-sharded table forces an involuntary
+        # full rematerialization in the SPMD partitioner on the token gather
+        params["embed"] = b.param("table", (v, d), ("vocab", None), scale=0.02)
+    sb = _StackedBuilder(b, repeats)
+    blocks = []
+    for j, kind in enumerate(pat):
+        with b.scope(f"pat{j}_{kind}"):
+            blocks.append(_block_params(sb, cfg, kind))
+    params["blocks"] = blocks
+    remainder = []
+    for j, kind in enumerate(rem):
+        with b.scope(f"rem{j}_{kind}"):
+            remainder.append(_block_params(b, cfg, kind))
+    params["remainder"] = remainder
+    params["final_norm"] = b.param("final_norm", (d,), ("embed",), init="zeros")
+    if not cfg.tie_embeddings:
+        with b.scope("lm_head"):
+            params["lm_head"] = b.param("w", (d, v), ("embed", "vocab"), scale=0.02)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+def _cache_for(cfg: ModelConfig, kind: str, batch: int, max_len: int, abstract: bool):
+    kv = abstract_kv_cache if abstract else init_kv_cache
+    if kind in ("attn", "moe"):
+        window = cfg.window if cfg.family == "hybrid" else 0
+        return kv(cfg, batch, max_len, window)
+    if kind == "ssd":
+        return (abstract_ssm_state if abstract else init_ssm_state)(cfg, batch)
+    if kind == "rglru":
+        return (abstract_rglru_state if abstract else init_rglru_state)(cfg, batch)
+    if kind == "cross":
+        window = 0
+        return {
+            "self": kv(cfg, batch, max_len, window),
+            "cross": kv(cfg, batch, cfg.num_image_tokens, 0),
+        }
+    raise ValueError(kind)
+
+
+def _stack_tree(trees: List[Any]):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int):
+    pat, repeats, rem = pattern_of(cfg)
+    stacked = [
+        _stack_tree([_cache_for(cfg, kind, batch, max_len, False) for _ in range(repeats)])
+        for kind in pat
+    ]
+    remainder = [_cache_for(cfg, kind, batch, max_len, False) for kind in rem]
+    return {"blocks": stacked, "remainder": remainder}
+
+
+def abstract_caches(cfg: ModelConfig, batch: int, max_len: int):
+    pat, repeats, rem = pattern_of(cfg)
+
+    def stack_sds(sds):
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((repeats, *s.shape), s.dtype), sds
+        )
+
+    stacked = [stack_sds(_cache_for(cfg, kind, batch, max_len, True)) for kind in pat]
+    remainder = [_cache_for(cfg, kind, batch, max_len, True) for kind in rem]
+    return {"blocks": stacked, "remainder": remainder}
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    """Logical-axes tree mirroring init/abstract_caches (stack dim added)."""
+    from .attention import kv_cache_specs
+    from .rglru import rglru_state_specs
+    from .ssm import ssm_state_specs
+
+    def spec_for(kind):
+        if kind in ("attn", "moe"):
+            return kv_cache_specs(cfg)
+        if kind == "ssd":
+            return ssm_state_specs(cfg)
+        if kind == "rglru":
+            return rglru_state_specs(cfg)
+        if kind == "cross":
+            return {"self": kv_cache_specs(cfg), "cross": kv_cache_specs(cfg)}
+        raise ValueError(kind)
+
+    def is_axes(x):
+        return isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x)
+
+    def stack(tree):
+        return jax.tree.map(lambda axes: (None, *axes), tree, is_leaf=is_axes)
+
+    pat, repeats, rem = pattern_of(cfg)
+    return {
+        "blocks": [stack(spec_for(kind)) for kind in pat],
+        "remainder": [spec_for(kind) for kind in rem],
+    }
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+def _norm(x, w, cfg):
+    return rms_norm(x, w, cfg.norm_eps)
+
+
+def _apply_block(kind, p, x, cfg, ctx: Context, cache):
+    """Returns (x, new_cache, aux_dict)."""
+    decode = ctx.mode == "decode"
+    aux: Dict[str, jax.Array] = {}
+    window = cfg.window if cfg.family == "hybrid" else 0
+
+    if kind in ("attn", "moe"):
+        h, new_kv = attention(
+            p["attn"], _norm(x, p["ln_attn"], cfg), cfg,
+            positions=ctx.positions, window=window, cache=cache,
+        )
+        x = x + h
+        if kind == "attn":
+            x = x + ffn(p["mlp"], _norm(x, p["ln_mlp"], cfg))
+        else:
+            h, aux = moe_ffn(p["moe"], _norm(x, p["ln_mlp"], cfg), cfg)
+            x = x + h
+        return x, new_kv, aux
+
+    if kind == "ssd":
+        h, new_state = ssd_block(p["ssd"], _norm(x, p["ln"], cfg), cfg,
+                                 state=cache, decode=decode)
+        return x + h, new_state, aux
+
+    if kind == "rglru":
+        h, new_state = rglru_block(p["rec"], _norm(x, p["ln_rec"], cfg), cfg,
+                                   state=cache, decode=decode)
+        x = x + h
+        x = x + ffn(p["mlp"], _norm(x, p["ln_mlp"], cfg))
+        return x, new_state, aux
+
+    if kind == "cross":
+        self_cache = cache["self"] if cache is not None else None
+        cross_cache = cache["cross"] if cache is not None else None
+        h, new_self = attention(
+            p["attn"], _norm(x, p["ln_attn"], cfg), cfg,
+            positions=ctx.positions, cache=self_cache,
+        )
+        x = x + h
+        xh, new_cross = attention(
+            p["xattn"], _norm(x, p["ln_xattn"], cfg), cfg,
+            kv_x=ctx.img_embeds, causal=False, cache=cross_cache,
+            cache_update=not decode, rope=False,
+        )
+        x = x + jnp.tanh(p["gate_attn"]).astype(x.dtype) * xh
+        x = x + jnp.tanh(p["gate_mlp"]).astype(x.dtype) * ffn(
+            p["mlp"], _norm(x, p["ln_mlp"], cfg)
+        )
+        new_cache = None
+        if cache is not None:
+            new_cache = {"self": new_self, "cross": new_cross}
+        return x, new_cache, aux
+
+    raise ValueError(kind)
+
+
+def _zero_aux():
+    return {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
+
+
+def _acc_aux(acc, aux):
+    out = dict(acc)
+    for k, v in aux.items():
+        out[k] = out.get(k, jnp.zeros((), jnp.float32)) + v.astype(jnp.float32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# full decoder
+# ---------------------------------------------------------------------------
+def decoder_forward(
+    params,
+    tokens: jax.Array,                 # (B, S) int32
+    cfg: ModelConfig,
+    ctx: Context,
+    caches=None,
+):
+    """Returns (final_hidden (B,S,d), new_caches, aux)."""
+    pat, repeats, rem = pattern_of(cfg)
+    x = params["embed"][tokens]
+    if cfg.family == "hybrid":  # gemma-style embedding scale
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    x = shard_hint(x, "act_batch", "act_seq", "act_embed")
+
+    use_scan = cfg.parallel.scan_layers and repeats > 1
+    remat = cfg.parallel.remat != "none"
+
+    def pattern_step(x, ps, cs):
+        new_caches = []
+        aux = _zero_aux()
+        for j, kind in enumerate(pat):
+            c = cs[j] if cs is not None else None
+            x, nc, a = _apply_block(kind, ps[j], x, cfg, ctx, c)
+            new_caches.append(nc)
+            aux = _acc_aux(aux, a)
+        return x, tuple(new_caches), aux
+
+    if remat:
+        pattern_step = jax.checkpoint(pattern_step, static_argnums=())
+
+    if use_scan:
+        has_cache = caches is not None
+        if has_cache:
+            # caches ride in the CARRY with indexed in-place updates: XLA
+            # aliases while-loop carries, so the serve step holds ONE cache
+            # buffer (donated in and out) instead of an xs + ys pair — at
+            # grok/vision decode scale that pair alone blows past HBM.
+            cache_carry = tuple(caches["blocks"])
+
+            def body(carry, ps):
+                x, aux_acc, bufs, i = carry
+                cs = jax.tree.map(
+                    lambda b: jax.lax.dynamic_index_in_dim(b, i, 0, keepdims=False),
+                    bufs,
+                )
+                x, ncs, aux = pattern_step(x, ps, cs)
+                bufs = jax.tree.map(
+                    lambda b, n: jax.lax.dynamic_update_index_in_dim(
+                        b, n.astype(b.dtype), i, 0
+                    ),
+                    bufs,
+                    ncs,
+                )
+                aux_acc = _acc_aux(aux_acc, aux)
+                return (x, aux_acc, bufs, i + 1), 0.0
+
+            (x, aux_acc, cache_carry, _), _ = jax.lax.scan(
+                body,
+                (x, _zero_aux(), cache_carry, jnp.zeros((), jnp.int32)),
+                tuple(params["blocks"]),
+            )
+            new_block_caches = list(cache_carry)
+        else:
+
+            def body(carry, ps):
+                x, aux_acc = carry
+                x, ncs, aux = pattern_step(x, ps, None)
+                aux_acc = _acc_aux(aux_acc, aux)
+                return (x, aux_acc), 0.0
+
+            (x, aux_acc), _ = jax.lax.scan(body, (x, _zero_aux()), tuple(params["blocks"]))
+            new_block_caches = None
+    else:
+        aux_acc = _zero_aux()
+        new_block_caches = [] if caches is not None else None
+        for r in range(repeats):
+            ps = jax.tree.map(lambda p: p[r], tuple(params["blocks"]))
+            cs = (
+                jax.tree.map(lambda c: c[r], tuple(caches["blocks"]))
+                if caches is not None
+                else None
+            )
+            x, ncs, aux = pattern_step(x, ps, cs)
+            aux_acc = _acc_aux(aux_acc, aux)
+            if caches is not None:
+                new_block_caches.append(ncs)
+        if caches is not None and new_block_caches:
+            # restack to match the scan layout
+            new_block_caches = [
+                jax.tree.map(lambda *xs: jnp.stack(xs), *[ncs for ncs in new_block_caches])
+            ]
+            new_block_caches = list(new_block_caches[0])
+
+    # remainder blocks (unrolled)
+    new_rem = [] if caches is not None else None
+    for j, kind in enumerate(rem):
+        c = caches["remainder"][j] if caches is not None else None
+        x, nc, aux = _apply_block(kind, params["remainder"][j], x, cfg, ctx, c)
+        aux_acc = _acc_aux(aux_acc, aux)
+        if caches is not None:
+            new_rem.append(nc)
+
+    x = _norm(x, params["final_norm"], cfg)
+    new_caches = (
+        {"blocks": new_block_caches, "remainder": new_rem} if caches is not None else None
+    )
+    return x, new_caches, aux_acc
+
+
+def lm_logits(params, hidden: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        return hidden @ params["embed"].T
+    return hidden @ params["lm_head"]

@@ -1,0 +1,15 @@
+"""Optimizer substrate: AdamW, schedules, clipping, gradient compression."""
+
+from .adamw import AdamW, AdamWState
+from .clipping import clip_by_global_norm, global_norm
+from .schedule import constant, warmup_cosine, warmup_linear_decay
+
+__all__ = [
+    "AdamW",
+    "AdamWState",
+    "clip_by_global_norm",
+    "global_norm",
+    "warmup_cosine",
+    "warmup_linear_decay",
+    "constant",
+]

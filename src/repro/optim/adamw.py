@@ -1,0 +1,92 @@
+"""AdamW with multi-precision state and decoupled weight decay.
+
+Pure-functional (optax-style): ``init(params) -> state``,
+``update(grads, state, params, lr) -> (updates, state)``.  Moments are kept
+in fp32 regardless of param dtype (bf16 training standard); the returned
+updates are cast back to the param dtype.  State shardings mirror the
+param shardings (ZeRO-style: FSDP-sharded params ⇒ FSDP-sharded moments),
+which `parallel/sharding.py` wires automatically since state is a pytree
+with the same structure as params.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWState", "AdamW"]
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array       # () int32
+    mu: object            # pytree like params (fp32)
+    nu: object            # pytree like params (fp32)
+
+
+class AdamW:
+    def __init__(
+        self,
+        b1: float = 0.9,
+        b2: float = 0.95,
+        eps: float = 1e-8,
+        weight_decay: float = 0.1,
+        *,
+        decay_mask=None,       # fn(path_tuple, leaf) -> bool; default: ndim >= 2
+        state_dtype=jnp.float32,   # bf16 moments halve optimizer HBM (grok-scale)
+    ) -> None:
+        self.b1, self.b2, self.eps, self.wd = b1, b2, eps, weight_decay
+        self.decay_mask = decay_mask or (lambda path, x: x.ndim >= 2)
+        self.state_dtype = state_dtype
+
+    def init(self, params) -> AdamWState:
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, self.state_dtype), params)
+        return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                          nu=jax.tree.map(jnp.copy, zeros))
+
+    def abstract_state(self, abstract_params) -> AdamWState:
+        z = jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, self.state_dtype), abstract_params
+        )
+        return AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32), mu=z, nu=z)
+
+    def state_specs(self, param_specs) -> AdamWState:
+        """Logical-axes tree for the optimizer state (mirrors params)."""
+        return AdamWState(step=(), mu=param_specs, nu=jax.tree.map(
+            lambda s: s, param_specs,
+            is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x)))
+
+    def update(self, grads, state: AdamWState, params, lr) -> Tuple[object, AdamWState]:
+        step = state.step + 1
+        b1, b2 = self.b1, self.b2
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(path, g, m, v, p):
+            gf = g.astype(jnp.float32)
+            mf = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            vf = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+            mhat = mf / c1
+            vhat = vf / c2
+            u = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.wd and self.decay_mask(path, p):
+                u = u + self.wd * p.astype(jnp.float32)
+            return (-lr * u).astype(p.dtype), mf.astype(m.dtype), vf.astype(v.dtype)
+
+        flat = jax.tree_util.tree_flatten_with_path(grads)[0]
+        paths = [p for p, _ in flat]
+        gl = [g for _, g in flat]
+        ml = jax.tree.leaves(state.mu)
+        vl = jax.tree.leaves(state.nu)
+        pl = jax.tree.leaves(params)
+        outs = [upd(path, g, m, v, p) for path, g, m, v, p in zip(paths, gl, ml, vl, pl)]
+        treedef = jax.tree.structure(grads)
+        updates = jax.tree.unflatten(treedef, [o[0] for o in outs])
+        mu = jax.tree.unflatten(treedef, [o[1] for o in outs])
+        nu = jax.tree.unflatten(treedef, [o[2] for o in outs])
+        return updates, AdamWState(step=step, mu=mu, nu=nu)
+
+    @staticmethod
+    def apply_updates(params, updates):
+        return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)

@@ -1,0 +1,27 @@
+"""LR schedules (pure functions of step)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["warmup_cosine", "constant", "warmup_linear_decay"]
+
+
+def warmup_cosine(step, *, peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    s = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * s / jnp.maximum(warmup_steps, 1)
+    t = jnp.clip((s - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = peak_lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(s < warmup_steps, warm, cos)
+
+
+def warmup_linear_decay(step, *, peak_lr: float, warmup_steps: int, total_steps: int):
+    s = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * s / jnp.maximum(warmup_steps, 1)
+    t = jnp.clip((s - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    return jnp.where(s < warmup_steps, warm, peak_lr * (1 - t))
+
+
+def constant(step, *, peak_lr: float, **_):
+    return jnp.full((), peak_lr, jnp.float32)

@@ -1,0 +1,17 @@
+"""Distribution layer: mesh rules, sharding, pipeline parallelism,
+compressed collectives."""
+
+from .collectives import compressed_psum, compressed_psum_tree
+from .mesh_rules import MeshRules, current_rules, shard_hint, use_rules
+from .pipeline import pipeline_apply, stage_partition
+
+__all__ = [
+    "MeshRules",
+    "use_rules",
+    "current_rules",
+    "shard_hint",
+    "pipeline_apply",
+    "stage_partition",
+    "compressed_psum",
+    "compressed_psum_tree",
+]

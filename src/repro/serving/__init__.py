@@ -1,0 +1,6 @@
+"""Serving: continuous batching engine (ENEAC completion-driven refill)."""
+
+from .engine import Request, RequestResult, ServingEngine
+from .sampling import sample
+
+__all__ = ["Request", "RequestResult", "ServingEngine", "sample"]

@@ -1,0 +1,27 @@
+"""Token sampling (greedy / temperature / top-k)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["sample"]
+
+
+def sample(
+    logits: jax.Array,          # (B, V)
+    key: Optional[jax.Array] = None,
+    *,
+    temperature: float = 0.0,
+    top_k: int = 0,
+) -> jax.Array:
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lf = logits.astype(jnp.float32) / temperature
+    if top_k:
+        thresh = jax.lax.top_k(lf, top_k)[0][..., -1:]
+        lf = jnp.where(lf < thresh, -jnp.inf, lf)
+    assert key is not None, "stochastic sampling needs a key"
+    return jax.random.categorical(key, lf, axis=-1).astype(jnp.int32)

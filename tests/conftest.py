@@ -1,0 +1,10 @@
+import os
+
+# Tests run on the single real CPU device (NOT the 512-device dry-run
+# override — that env var belongs exclusively to launch/dryrun.py).
+# A small deterministic platform config keeps CI stable.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,111 @@
+"""Hetero partitioner, straggler mitigation, elastic rescale."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ElasticMeshManager,
+    HeterogeneousPartitioner,
+    StragglerMitigator,
+)
+from repro.core.hetero import HeterogeneousPartitioner as HP
+
+
+class TestPartitioner:
+    @given(
+        total=st.integers(4, 512),
+        tps=st.lists(st.floats(0.1, 10.0), min_size=2, max_size=8),
+    )
+    @settings(max_examples=80, deadline=None)
+    def test_counts_sum_exactly(self, total, tps):
+        groups = {f"g{i}": t for i, t in enumerate(tps)}
+        if total < len(groups):
+            return
+        p = HeterogeneousPartitioner().proportional(total, groups)
+        assert p.total == total
+        assert all(v >= 1 for v in p.counts.values())
+        assert abs(sum(p.weights.values()) - 1.0) < 1e-9
+
+    def test_proportionality(self):
+        p = HeterogeneousPartitioner().proportional(
+            100, {"fast": 3.0, "slow": 1.0}
+        )
+        assert p.counts["fast"] > 2.5 * p.counts["slow"]
+
+    def test_hysteresis_suppresses_noise(self):
+        hp = HeterogeneousPartitioner(rebalance_threshold=0.3)
+        p1 = hp.update(64, {"a": 1.0, "b": 1.0})
+        p2 = hp.update(64, {"a": 1.05, "b": 0.98})   # noise
+        assert p2 is p1
+        p3 = hp.update(64, {"a": 3.0, "b": 1.0})     # real shift
+        assert p3 is not p1
+
+    def test_predicted_step_time_improves(self):
+        tps = {"a": 2.0, "b": 1.0, "c": 1.0, "d": 0.5}
+        uniform = HP.uniform(32, list(tps))
+        prop = HeterogeneousPartitioner().proportional(32, tps)
+        assert HP.step_time(prop, tps) < HP.step_time(uniform, tps)
+
+
+class TestStragglerMitigation:
+    def test_detects_persistent_straggler_only(self):
+        m = StragglerMitigator(["g0", "g1", "g2", "g3"], total_microbatches=32)
+        # one transient slow step: no plan
+        assert m.step({"g0": 1.0, "g1": 1.0, "g2": 1.0, "g3": 2.5}) is None
+        plan = None
+        for _ in range(6):
+            plan = m.step({"g0": 1.0, "g1": 1.0, "g2": 1.0, "g3": 2.5}) or plan
+        assert plan is not None
+        assert plan.partition.counts["g3"] < plan.partition.counts["g0"]
+        assert plan.predicted_speedup > 1.0
+
+    def test_no_false_positive_on_homogeneous_fleet(self):
+        m = StragglerMitigator(["g0", "g1"], total_microbatches=8)
+        for _ in range(10):
+            assert m.step({"g0": 1.0, "g1": 1.02}) is None
+
+
+class TestElastic:
+    def test_intact_mesh_no_plan(self):
+        e = ElasticMeshManager((2, 16, 16), ("pod", "data", "model"))
+        assert e.plan() is None
+
+    def test_host_failure_takes_8_chips_and_shrinks_dp(self):
+        e = ElasticMeshManager((2, 16, 16), ("pod", "data", "model"))
+        e.mark_failed(17)
+        plan = e.plan()
+        assert plan is not None
+        assert len(plan.lost_devices) == 8          # whole host fails
+        assert plan.new_shape[2] == 16              # model axis sacred
+        assert plan.new_device_count <= len(plan.healthy_devices) + 8
+        assert plan.dp_scale < 1.0
+
+    def test_miss_threshold(self):
+        e = ElasticMeshManager((16, 16), ("data", "model"), miss_threshold=3)
+        e.miss(0); e.miss(0)
+        assert e.plan() is None
+        e.miss(0)
+        assert e.plan() is not None
+
+    def test_heartbeat_resets_misses(self):
+        e = ElasticMeshManager((16, 16), ("data", "model"), miss_threshold=2)
+        e.miss(5)
+        e.heartbeat(5)
+        e.miss(5)
+        assert e.plan() is None
+
+    def test_model_axis_unsatisfiable_raises(self):
+        e = ElasticMeshManager((1, 16), ("data", "model"), host_size=8)
+        for d in range(0, 16, 8):
+            e.mark_failed(d)
+        with pytest.raises(RuntimeError):
+            e.plan()
+
+    def test_apply_adopts_new_shape(self):
+        e = ElasticMeshManager((2, 16, 16), ("pod", "data", "model"))
+        e.mark_failed(0)
+        plan = e.plan()
+        e.apply(plan)
+        assert e.shape == plan.new_shape

@@ -1,0 +1,143 @@
+"""Per-arch smoke tests: reduced config, one forward/train step on CPU,
+output shapes + finiteness (assignment deliverable f)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, all_configs, get_config
+from repro.configs.base import ParallelConfig
+from repro.models import make_model
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=2, S=16):
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S + 1), 0, cfg.vocab_size)
+    batch = {
+        "tokens": toks[:, :S],
+        "labels": toks[:, 1:],
+        "mask": jnp.ones((B, S), jnp.float32),
+    }
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.full((B, cfg.encoder_seq, cfg.d_model), 0.1, jnp.float32)
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jnp.full(
+            (B, cfg.num_image_tokens, cfg.d_model), 0.1, jnp.float32
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+class TestArchSmoke:
+    def test_forward_shapes_and_finiteness(self, arch):
+        cfg = get_config(arch).smoke()
+        model = make_model(cfg)
+        params = model.init(KEY)
+        B, S = 2, 16
+        batch = _batch(cfg, B, S)
+        hidden, _, aux = model.forward(params, batch, mode="train")
+        assert hidden.shape == (B, S, cfg.d_model)
+        assert bool(jnp.all(jnp.isfinite(hidden.astype(jnp.float32))))
+        logits = model.logits(params, hidden)
+        assert logits.shape == (B, S, cfg.padded_vocab)
+
+    def test_train_step_loss_and_grads_finite(self, arch):
+        cfg = get_config(arch).smoke()
+        model = make_model(cfg)
+        params = model.init(KEY)
+        batch = _batch(cfg)
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: model.loss_fn(p, batch, loss_chunk=0), has_aux=True
+        )(params)
+        assert np.isfinite(float(loss))
+        # random init on 256-vocab: loss near ln(256)
+        assert 3.0 < float(metrics["ce_loss"]) < 8.0
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        assert np.isfinite(float(gnorm)) and float(gnorm) > 0
+
+    def test_decode_matches_teacher_forcing(self, arch):
+        """Prefill + one decode step == full forward at high capacity."""
+        cfg = get_config(arch).smoke()
+        if cfg.family == "moe":
+            cfg = cfg.replace(parallel=ParallelConfig(capacity_factor=8.0))
+        model = make_model(cfg)
+        params = model.init(KEY)
+        B, S = 2, 8
+        toks = jax.random.randint(jax.random.PRNGKey(2), (B, S + 1), 0,
+                                  cfg.vocab_size)
+        batch = {"tokens": toks[:, :S]}
+        if cfg.family == "encdec":
+            batch["frames"] = jnp.full((B, cfg.encoder_seq, cfg.d_model), 0.1,
+                                       jnp.float32)
+        if cfg.family == "vlm":
+            batch["image_embeds"] = jnp.full(
+                (B, cfg.num_image_tokens, cfg.d_model), 0.1, jnp.float32)
+        _, caches = model.prefill(params, batch, max_len=S + 4)
+        logits_dec, _ = model.decode_step(
+            params, toks[:, S:S + 1], jnp.full((B, 1), S, jnp.int32), caches)
+        full = dict(batch)
+        full["tokens"] = toks
+        hidden, _, _ = model.forward(params, full, mode="train")
+        oracle = model.logits(params, hidden)[:, -1, :]
+        np.testing.assert_allclose(np.asarray(logits_dec), np.asarray(oracle),
+                                   atol=2e-3, rtol=2e-2)
+
+
+class TestConfigExactness:
+    """The full configs carry the assignment's exact dimensions."""
+
+    EXPECT = {
+        "stablelm-12b": dict(num_layers=40, d_model=5120, num_heads=32,
+                             num_kv_heads=8, d_ff=13824, vocab_size=100352),
+        "tinyllama-1.1b": dict(num_layers=22, d_model=2048, num_heads=32,
+                               num_kv_heads=4, d_ff=5632, vocab_size=32000),
+        "qwen3-14b": dict(num_layers=40, d_model=5120, num_heads=40,
+                          num_kv_heads=8, d_ff=17408, vocab_size=151936,
+                          qk_norm=True),
+        "llama3.2-3b": dict(num_layers=28, d_model=3072, num_heads=24,
+                            num_kv_heads=8, d_ff=8192, vocab_size=128256),
+        "whisper-large-v3": dict(num_layers=32, encoder_layers=32, d_model=1280,
+                                 num_heads=20, num_kv_heads=20, d_ff=5120,
+                                 vocab_size=51866),
+        "mamba2-130m": dict(num_layers=24, d_model=768, vocab_size=50280,
+                            ssm_state=128),
+        "grok-1-314b": dict(num_layers=64, d_model=6144, num_heads=48,
+                            num_kv_heads=8, d_ff=32768, vocab_size=131072,
+                            num_experts=8, experts_per_token=2),
+        "qwen3-moe-30b-a3b": dict(num_layers=48, d_model=2048, num_heads=32,
+                                  num_kv_heads=4, vocab_size=151936,
+                                  num_experts=128, experts_per_token=8,
+                                  moe_d_ff=768),
+        "llama-3.2-vision-90b": dict(num_layers=100, d_model=8192, num_heads=64,
+                                     num_kv_heads=8, d_ff=28672,
+                                     vocab_size=128256, cross_attn_every=5),
+        "recurrentgemma-9b": dict(num_layers=38, d_model=4096, num_heads=16,
+                                  num_kv_heads=1, d_ff=12288, vocab_size=256000,
+                                  window=2048),
+    }
+
+    @pytest.mark.parametrize("arch", ARCH_NAMES)
+    def test_dims(self, arch):
+        cfg = get_config(arch)
+        for k, v in self.EXPECT[arch].items():
+            assert getattr(cfg, k) == v, f"{arch}.{k}: {getattr(cfg, k)} != {v}"
+
+    def test_all_ten_archs_registered(self):
+        assert len(ARCH_NAMES) == 10
+
+    @pytest.mark.parametrize("arch", ARCH_NAMES)
+    def test_param_spec_tree_matches_param_tree(self, arch):
+        cfg = get_config(arch).smoke()
+        model = make_model(cfg)
+        specs = model.param_specs()
+        abstract = model.abstract_params()
+        is_axes = lambda x: isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x)
+        flat_s = jax.tree_util.tree_flatten(specs, is_leaf=is_axes)[0]
+        flat_a = jax.tree_util.tree_leaves(abstract)
+        assert len(flat_s) == len(flat_a)
+        for s, a in zip(flat_s, flat_a):
+            assert len(s) == len(a.shape)

@@ -1,0 +1,121 @@
+"""ENEAC MoE dispatch: capacity chunks, overflow → fallback, invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import moe_dispatch as md
+from repro.core.moe_dispatch import CapacityController
+
+
+def _plan(T=32, E=4, k=2, C=8, seed=0):
+    key = jax.random.PRNGKey(seed)
+    logits = jax.random.normal(key, (T, E))
+    r = md.route_topk(logits, k)
+    return md.make_dispatch_plan(r.expert_ids, r.expert_probs, E, C), r
+
+
+class TestRouting:
+    def test_topk_shapes_and_normalization(self):
+        r = md.route_topk(jax.random.normal(jax.random.PRNGKey(0), (16, 8)), 3)
+        assert r.expert_ids.shape == (16, 3)
+        np.testing.assert_allclose(np.sum(np.asarray(r.expert_probs), -1), 1.0,
+                                   rtol=1e-5)
+
+    def test_aux_loss_minimal_when_balanced(self):
+        # uniform logits ⇒ aux loss ≈ 1 (its minimum for top-1 fraction)
+        logits = jnp.zeros((1024, 4))
+        r = md.route_topk(logits, 1)
+        assert float(r.aux_loss) == pytest.approx(1.0, abs=0.05)
+
+
+class TestDispatchPlan:
+    @given(T=st.integers(1, 64), E=st.integers(1, 8), k=st.integers(1, 3),
+           C=st.integers(1, 32), seed=st.integers(0, 100))
+    @settings(max_examples=60, deadline=None)
+    def test_slot_assignment_invariants(self, T, E, k, C, seed):
+        if k > E:
+            return
+        plan, _ = _plan(T, E, k, C, seed)
+        slot = np.asarray(plan.slot_index)
+        overflow = np.asarray(plan.overflow).reshape(-1)
+        # every non-overflow assignment has a unique slot in range
+        live = slot[slot >= 0]
+        assert len(np.unique(live)) == len(live)
+        assert (live < E * C).all()
+        # overflow ⇔ slot == -1
+        np.testing.assert_array_equal(slot == -1, overflow)
+        # per-expert occupancy ≤ C
+        experts = live // C
+        for e, cnt in zip(*np.unique(experts, return_counts=True)):
+            assert cnt <= C
+        # slot table consistency: every filled (e,c) maps back to a token
+        st_tok = np.asarray(plan.slot_token)
+        valid = np.asarray(plan.slot_valid)
+        assert (st_tok[valid] < T).all()
+        assert int(valid.sum()) == len(live)
+
+    def test_first_come_first_served_within_expert(self):
+        # tokens routed in order; capacity 2 ⇒ tokens 0,1 get slots, 2 spills
+        ids = jnp.zeros((3, 1), jnp.int32)
+        probs = jnp.ones((3, 1))
+        plan = md.make_dispatch_plan(ids, probs, num_experts=2, capacity=2)
+        assert not bool(plan.overflow[0, 0])
+        assert not bool(plan.overflow[1, 0])
+        assert bool(plan.overflow[2, 0])
+
+
+class TestDispatchCombine:
+    def test_roundtrip_no_overflow(self):
+        T, E, k, C, d = 16, 4, 2, 16, 8
+        plan, r = _plan(T, E, k, C)
+        x = jax.random.normal(jax.random.PRNGKey(1), (T, d))
+        xe = md.dispatch(x, plan)
+        # identity experts + zero fallback ⇒ output = sum_k gate * token = token
+        out = md.combine(xe, jnp.zeros((T, d)), plan)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(x), rtol=1e-5)
+
+    def test_overflow_goes_to_fallback(self):
+        # capacity 1, all tokens to expert 0 ⇒ token 0 on expert, rest fallback
+        T, d = 4, 4
+        ids = jnp.zeros((T, 1), jnp.int32)
+        probs = jnp.ones((T, 1))
+        plan = md.make_dispatch_plan(ids, probs, num_experts=1, capacity=1)
+        x = jnp.arange(T * d, dtype=jnp.float32).reshape(T, d)
+        xe = md.dispatch(x, plan)
+        fb = -jnp.ones((T, d))
+        out = md.combine(xe * 0.0, fb, plan)
+        np.testing.assert_allclose(np.asarray(out[0]), 0.0)
+        np.testing.assert_allclose(np.asarray(out[1:]), -1.0)
+
+    def test_gradients_flow_through_both_paths(self):
+        T, E, k, C, d = 8, 2, 1, 2, 4   # tight capacity forces overflow
+        plan, _ = _plan(T, E, k, C)
+
+        def f(x, fb_w):
+            xe = md.dispatch(x, plan)
+            return jnp.sum(md.combine(xe * 2.0, x @ fb_w, plan))
+
+        x = jax.random.normal(jax.random.PRNGKey(2), (T, d))
+        w = jnp.eye(d)
+        gx, gw = jax.grad(f, argnums=(0, 1))(x, w)
+        assert float(jnp.sum(jnp.abs(gx))) > 0
+        assert float(jnp.sum(jnp.abs(gw))) > 0  # fallback used ⇒ grads
+
+
+class TestCapacityController:
+    def test_grows_on_overflow(self):
+        c = CapacityController(capacity_factor=1.0)
+        changed = c.update(overflow_frac=0.3, mean_load=0.9)
+        assert changed and c.capacity_factor > 1.0
+
+    def test_shrinks_when_underfull(self):
+        c = CapacityController(capacity_factor=2.0)
+        changed = c.update(overflow_frac=0.0, mean_load=0.2)
+        assert changed and c.capacity_factor < 2.0
+
+    def test_quantized_hysteresis(self):
+        c = CapacityController(capacity_factor=1.25, quantum=0.25)
+        assert not c.update(overflow_frac=0.021, mean_load=0.8)  # tiny breach

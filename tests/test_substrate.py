@@ -1,0 +1,229 @@
+"""Optimizer, data pipeline, checkpointing, compression, serving."""
+
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data import MemmapTokens, Prefetcher, SyntheticTokens
+from repro.checkpoint import Checkpointer
+from repro.models import make_model
+from repro.optim import AdamW, clip_by_global_norm, warmup_cosine
+from repro.optim.compression import CompressionState, ef_compress_tree, init_state
+from repro.serving import Request, ServingEngine
+
+
+class TestAdamW:
+    def test_quadratic_convergence(self):
+        opt = AdamW(weight_decay=0.0)
+        params = {"w": jnp.array([5.0, -3.0])}
+        state = opt.init(params)
+        for _ in range(200):
+            g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+            upd, state = opt.update(g, state, params, 0.1)
+            params = AdamW.apply_updates(params, upd)
+        assert float(jnp.max(jnp.abs(params["w"]))) < 0.05
+
+    def test_bf16_state_dtype(self):
+        opt = AdamW(state_dtype=jnp.bfloat16)
+        state = opt.init({"w": jnp.zeros((4,), jnp.bfloat16)})
+        assert state.mu["w"].dtype == jnp.bfloat16
+
+    def test_weight_decay_only_on_matrices(self):
+        opt = AdamW(weight_decay=0.5)
+        params = {"w": jnp.ones((2, 2)), "b": jnp.ones((2,))}
+        state = opt.init(params)
+        zero_g = jax.tree.map(jnp.zeros_like, params)
+        upd, _ = opt.update(zero_g, state, params, 1.0)
+        assert float(jnp.max(jnp.abs(upd["w"]))) > 0      # decayed
+        assert float(jnp.max(jnp.abs(upd["b"]))) == 0     # not decayed
+
+    def test_clip(self):
+        tree = {"a": jnp.full((10,), 10.0)}
+        clipped, norm = clip_by_global_norm(tree, 1.0)
+        assert float(norm) > 1.0
+        import math
+        assert math.isclose(
+            float(jnp.linalg.norm(clipped["a"])), 1.0, rel_tol=1e-5)
+
+    def test_schedule(self):
+        lr = warmup_cosine(jnp.asarray(5), peak_lr=1e-3, warmup_steps=10,
+                           total_steps=100)
+        assert float(lr) == pytest.approx(5e-4)
+
+
+class TestData:
+    def test_synthetic_deterministic(self):
+        s = SyntheticTokens(1000, 32)
+        b1 = s.batch(3, 0, 4, 2)
+        b2 = s.batch(3, 0, 4, 2)
+        np.testing.assert_array_equal(b1.tokens, b2.tokens)
+        b3 = s.batch(3, 1, 4, 2)
+        assert not np.array_equal(b1.tokens, b3.tokens)
+
+    def test_labels_are_next_tokens(self):
+        s = SyntheticTokens(1000, 16)
+        b = s.batch(0, 0, 1, 2)
+        assert b.tokens.shape == b.labels.shape == (2, 16)
+
+    def test_memmap_roundtrip(self, tmp_path):
+        corpus = np.arange(10_000, dtype=np.int32) % 512
+        path = tmp_path / "tokens.bin"
+        MemmapTokens.write_corpus(path, corpus)
+        src = MemmapTokens(path, seq_len=32)
+        b = src.batch(0, 0, 2, 3)
+        assert b.tokens.shape == (3, 32)
+        # windows are contiguous corpus slices
+        row = b.tokens[0]
+        assert ((np.diff(row) == 1) | (np.diff(row) == 1 - 512)).all()
+
+    def test_prefetcher_orders_and_closes(self):
+        made = []
+        p = Prefetcher(lambda s: made.append(s) or s * 10, depth=2)
+        steps = [p.get()[1] for _ in range(5)]
+        p.close()
+        assert steps == [0, 10, 20, 30, 40]
+
+    def test_prefetcher_propagates_errors(self):
+        def boom(step):
+            if step == 1:
+                raise ValueError("bad shard")
+            return step
+        p = Prefetcher(boom, depth=1)
+        p.get()
+        with pytest.raises(ValueError):
+            p.get()
+            p.get()
+        p.close()
+
+
+class TestCheckpointer:
+    def _tree(self, seed=0):
+        k = jax.random.PRNGKey(seed)
+        return {
+            "layer": {"w": jax.random.normal(k, (8, 4)),
+                      "b": jnp.zeros((4,))},
+            "step_count": jnp.asarray(7, jnp.int32),
+        }
+
+    def test_roundtrip(self, tmp_path):
+        ck = Checkpointer(tmp_path)
+        tree = self._tree()
+        ck.save(10, tree, blocking=True)
+        like = jax.tree.map(np.asarray, tree)
+        restored, step = ck.restore(None, like)
+        assert step == 10
+        np.testing.assert_allclose(restored["layer"]["w"],
+                                   np.asarray(tree["layer"]["w"]))
+
+    def test_async_save_completion_event(self, tmp_path):
+        ck = Checkpointer(tmp_path)
+        done = ck.save(1, self._tree())
+        info = done.wait(timeout=30)
+        assert info.step == 1
+        assert (info.path / "manifest.json").exists()
+
+    def test_gc_keeps_newest(self, tmp_path):
+        ck = Checkpointer(tmp_path, keep=2)
+        for s in (1, 2, 3, 4):
+            ck.save(s, self._tree(), blocking=True)
+        assert ck.latest_step() == 4
+        steps = sorted(int(p.name.split("_")[1]) for p in tmp_path.glob("step_*"))
+        assert steps == [3, 4]
+
+    def test_corruption_detected(self, tmp_path):
+        ck = Checkpointer(tmp_path)
+        ck.save(5, self._tree(), blocking=True)
+        victim = next((tmp_path / "step_00000005").glob("arr_*.npy"))
+        arr = np.load(victim)
+        np.save(victim, arr + 1.0)
+        with pytest.raises(IOError):
+            ck.restore(None, jax.tree.map(np.asarray, self._tree()))
+
+    def test_incomplete_checkpoint_ignored(self, tmp_path):
+        ck = Checkpointer(tmp_path)
+        ck.save(1, self._tree(), blocking=True)
+        # a torn write: directory without manifest
+        (tmp_path / "step_00000009").mkdir()
+        assert ck.latest_step() == 1
+
+
+class TestCompression:
+    def test_error_feedback_preserves_sum(self):
+        """EF invariant: Σ_t transmitted_t + residual_T = Σ_t grad_t."""
+        key = jax.random.PRNGKey(0)
+        grads = [{"w": 0.01 * jax.random.normal(jax.random.fold_in(key, i), (64,))}
+                 for i in range(20)]
+        state = init_state(grads[0])
+        sent_total = jnp.zeros((64,))
+        for g in grads:
+            sent, state = ef_compress_tree(g, state)
+            sent_total = sent_total + sent["w"]
+        true_total = sum(g["w"] for g in grads)
+        drift = sent_total + state.residual["w"] - true_total
+        assert float(jnp.max(jnp.abs(drift))) < 1e-5
+
+    def test_compression_is_int8_range(self):
+        from repro.optim.compression import compress, decompress
+        x = jax.random.normal(jax.random.PRNGKey(1), (128,)) * 3
+        q, s = compress(x)
+        assert q.dtype == jnp.int8
+        rel = float(jnp.max(jnp.abs(decompress(q, s) - x)) / jnp.max(jnp.abs(x)))
+        assert rel < 0.02
+
+
+class TestServing:
+    @pytest.fixture(scope="class")
+    def model_and_params(self):
+        cfg = get_config("tinyllama-1.1b").smoke()
+        m = make_model(cfg)
+        return cfg, m, m.init(jax.random.PRNGKey(0))
+
+    def _requests(self, cfg, n=8, seed=0):
+        rng = np.random.default_rng(seed)
+        return [
+            Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        int(rng.integers(2, 8))).astype(np.int32),
+                    max_new_tokens=int(rng.integers(2, 12)))
+            for i in range(n)
+        ]
+
+    def test_all_requests_complete_exact_lengths(self, model_and_params):
+        cfg, m, params = model_and_params
+        reqs = self._requests(cfg)
+        eng = ServingEngine(m, params, slots=3, max_len=48, mode="continuous")
+        for r in reqs:
+            eng.submit(r)
+        res = eng.run()
+        assert len(res) == len(reqs)
+        for r in reqs:
+            assert len(res[r.rid].tokens) == r.max_new_tokens
+
+    def test_continuous_no_worse_than_static(self, model_and_params):
+        cfg, m, params = model_and_params
+        outcomes = {}
+        for mode in ("static", "continuous"):
+            eng = ServingEngine(m, params, slots=4, max_len=48, mode=mode)
+            for r in self._requests(cfg, n=10, seed=1):
+                eng.submit(r)
+            eng.run()
+            outcomes[mode] = eng.throughput_report()
+        assert (outcomes["continuous"]["tokens_per_step"]
+                >= outcomes["static"]["tokens_per_step"])
+        assert outcomes["continuous"]["tokens"] == outcomes["static"]["tokens"]
+
+    def test_deterministic_greedy_generation(self, model_and_params):
+        cfg, m, params = model_and_params
+        outs = []
+        for _ in range(2):
+            eng = ServingEngine(m, params, slots=2, max_len=48)
+            for r in self._requests(cfg, n=4, seed=2):
+                eng.submit(r)
+            res = eng.run()
+            outs.append({k: tuple(v.tokens) for k, v in res.items()})
+        assert outs[0] == outs[1]
