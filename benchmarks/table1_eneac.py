@@ -26,7 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.paper_eneac import HotspotConfig, SpmmConfig, TABLE1_CONFIGS
-from repro.core import AsyncEngine, MultiDynamicScheduler, PollingEngine, WorkerKind
+from repro.core import HeteroRuntime, WorkerKind
 from repro.kernels.hotspot.ref import hotspot_step_ref
 from repro.kernels.spmm.ref import make_problem, spmm_ell_ref, to_block_ell
 from repro.kernels.spmm.ops import pad_rhs
@@ -132,30 +132,29 @@ def run_config(
     hp_penalty: float, time_scale: float = 1.0,
 ) -> float:
     """Returns throughput in items/ms (paper units)."""
-    sched = MultiDynamicScheduler(n_items, acc_chunk)
-    rates: Dict[str, float] = {}
-    if units in ("acc", "hybrid"):
-        t = t_acc * (hp_penalty if port == "hp" else 1.0)
-        for i in range(N_ACC):
-            sched.add_worker(f"acc{i}", WorkerKind.ACC)
-            rates[f"acc{i}"] = t
-    if units in ("cc", "hybrid"):
-        for i in range(N_CC):
-            sched.add_worker(f"cc{i}", WorkerKind.CC)
-            rates[f"cc{i}"] = t_cc
+    rt = HeteroRuntime()
 
     def worker(t_item):
         def fn(chunk):
             time.sleep(chunk.size * t_item * time_scale)
         return fn
 
-    fns = {name: worker(t) for name, t in rates.items()}
+    if units in ("acc", "hybrid"):
+        t = t_acc * (hp_penalty if port == "hp" else 1.0)
+        for i in range(N_ACC):
+            rt.register_unit(f"acc{i}", WorkerKind.ACC, work_fn=worker(t))
+    if units in ("cc", "hybrid"):
+        for i in range(N_CC):
+            rt.register_unit(f"cc{i}", WorkerKind.CC, work_fn=worker(t_cc))
+
     # Inter.=No configs poll their accelerators (the paper's host thread
     # burns cycles checking completion); CC-only has nothing to poll — the
     # host threads ARE the compute units.
-    engine = AsyncEngine(sched, fns) if (interrupts or units == "cc") else \
-        PollingEngine(sched, fns)
-    rep = engine.run()
+    engine = "interrupt" if (interrupts or units == "cc") else "polling"
+    rep = rt.parallel_for(
+        num_items=n_items, policy="multidynamic", engine=engine,
+        acc_chunk=acc_chunk,
+    )
     return rep.items / (rep.wall_time / time_scale) / 1e3
 
 
@@ -206,3 +205,21 @@ def chunk_sweep(benchmark: str = "hotspot", *, quick: bool = False):
         )
         rows.append((f"chunksweep_{benchmark}_c{chunk}", thr, "items_per_ms"))
     return rows
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="reduced sizes (CI-scale)")
+    ap.add_argument("--benchmarks", nargs="+", default=["hotspot", "spmm"],
+                    choices=["hotspot", "spmm"])
+    args = ap.parse_args()
+    print("name,throughput,unit")
+    for bench in args.benchmarks:
+        for name, thr, unit in table1(bench, quick=args.quick):
+            print(f"{name},{thr:.3f},{unit}")
+
+
+if __name__ == "__main__":
+    main()

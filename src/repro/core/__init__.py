@@ -10,16 +10,25 @@
   fallback (the LM-native instantiation of MultiDynamic).
 * :mod:`repro.core.parallel_for` — hybrid MXU/VPU executor for irregular
   workloads (SPMM).
+* :mod:`repro.core.runtime` — :class:`HeteroRuntime`, the unified front
+  door: scheduler policy × completion engine × clock behind one
+  ``parallel_for`` (the paper's Fig. 2 pipeline end-to-end).
 """
 
 from .scheduler import Chunk, MultiDynamicScheduler, OracleStaticScheduler, StaticScheduler, WorkerKind
 from .interrupts import AsyncEngine, CompletionEvent, PollingEngine, RunReport
+from .runtime import HeteroRuntime, SimulatedClock, UnitSpec, WallClock, WorkQueue
 from .hetero import HeteroPartition, HeterogeneousPartitioner, ThroughputTracker
 from .straggler import MitigationPlan, StragglerDetector, StragglerMitigator, StragglerReport
 from .elastic import DeviceHealth, ElasticMeshManager, RescalePlan
 from .parallel_for import HybridExecutor, SplitDecision
 
 __all__ = [
+    "HeteroRuntime",
+    "SimulatedClock",
+    "UnitSpec",
+    "WallClock",
+    "WorkQueue",
     "Chunk",
     "MultiDynamicScheduler",
     "StaticScheduler",

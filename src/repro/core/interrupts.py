@@ -73,11 +73,25 @@ class RunReport:
     per_worker_chunks: Dict[str, int]
     per_worker_busy: Dict[str, float]
     load_balance: float
+    # Sorted (start, stop) spans of completed chunks; filled by
+    # :class:`repro.core.runtime.HeteroRuntime` (None for bare engine runs).
+    coverage: Optional[List[tuple]] = None
 
     @property
     def throughput(self) -> float:
         """Items per millisecond — the paper's metric."""
         return self.items / max(self.wall_time * 1e3, 1e-12)
+
+    @property
+    def makespan(self) -> float:
+        """Wall (or virtual) time from first dispatch to last completion."""
+        return self.wall_time
+
+    @property
+    def utilization(self) -> Dict[str, float]:
+        """Busy fraction per unit over the run's makespan."""
+        w = max(self.wall_time, 1e-12)
+        return {n: min(b / w, 1.0) for n, b in self.per_worker_busy.items()}
 
 
 WorkFn = Callable[[Chunk], None]

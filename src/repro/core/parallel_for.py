@@ -8,9 +8,13 @@ enough density to fill dense tiles belong on the MXU; the long sparse tail
 is cheaper via gathers.  The split point is the scheduling decision, and
 MultiDynamic's measure-and-adapt loop chooses it.
 
-:class:`HybridExecutor` owns that decision.  It takes two path callables
-(already jitted; on real hardware the dense path is the Pallas kernel in
-``kernels/spmm``), per-path throughput trackers, and an execution model:
+:class:`HybridExecutor` owns that decision as a thin client of
+:class:`~repro.core.runtime.HeteroRuntime`: the MXU path registers as an
+ACC unit, the gather path as a CC unit, the runtime's oracle policy turns
+measured throughputs into the balanced split, and each round executes
+through ``runtime.parallel_for`` so the throughput feedback loop shares
+the engine bookkeeping (busy times, coverage, utilization) with every
+other workload.
 
 * ``"parallel"`` — units overlap (multi-device via shard_map, or
   MXU/VPU co-issue inside one fused kernel): cost = max(t_dense, t_sparse)
@@ -25,12 +29,11 @@ dynamically-adapted remainder.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable, Optional, Tuple
 
-import numpy as np
-
 from .hetero import ThroughputTracker
+from .runtime import HeteroRuntime
+from .scheduler import WorkerKind
 
 __all__ = ["SplitDecision", "HybridExecutor"]
 
@@ -78,15 +81,36 @@ class HybridExecutor:
         self.tracker = ThroughputTracker(alpha=0.4)
         self.tracker.update("dense", init_dense_throughput, 1.0)
         self.tracker.update("sparse", init_sparse_throughput, 1.0)
+        self._results: dict = {}
+        self.runtime = HeteroRuntime()
+        # dense first: the runtime's prefix split then maps "dense" to the
+        # leading (densest) rows, which is what the path callables expect.
+        self.runtime.register_unit(
+            "dense", WorkerKind.ACC,
+            work_fn=lambda c: self._results.__setitem__("dense", self.dense_fn(c.size)),
+        )
+        self.runtime.register_unit(
+            "sparse", WorkerKind.CC,
+            work_fn=lambda c: self._results.__setitem__("sparse", self.sparse_fn(c.size)),
+        )
+
+    def _sync_speeds(self) -> Tuple[float, float]:
+        td = self.tracker.get("dense")
+        ts = self.tracker.get("sparse")
+        self.runtime.set_speed("dense", td)
+        self.runtime.set_speed("sparse", ts)
+        return td, ts
 
     # -- the scheduling decision -------------------------------------------
     def decide(self) -> SplitDecision:
-        td = self.tracker.get("dense")
-        ts = self.tracker.get("sparse")
+        td, ts = self._sync_speeds()
         n = self.num_items
         if self.mode == "parallel":
-            # balance: n_d/td == n_s/ts  ⇒  n_d = n * td/(td+ts)
-            nd = int(round(n * td / max(td + ts, 1e-12)))
+            # balance: n_d/td == n_s/ts — the runtime's throughput-
+            # proportional (oracle) split over the two units.
+            plan = self.runtime.plan(n, policy="oracle")
+            lo, hi = plan.get("dense", (0, 0))
+            nd = hi - lo
         else:
             # serial: everything goes to the faster path; the split only
             # helps when per-item costs differ — callers sort densest-first
@@ -104,16 +128,19 @@ class HybridExecutor:
     # -- execution + feedback -------------------------------------------------
     def run(self, decision: Optional[SplitDecision] = None) -> Tuple[object, SplitDecision]:
         d = decision or self.decide()
-        t0 = time.perf_counter()
-        dense_res = self.dense_fn(d.n_dense) if d.n_dense else None
-        t1 = time.perf_counter()
-        sparse_res = self.sparse_fn(d.n_sparse) if d.n_sparse else None
-        t2 = time.perf_counter()
-        if d.n_dense:
-            self.tracker.update("dense", d.n_dense, max(t1 - t0, 1e-9))
-        if d.n_sparse:
-            self.tracker.update("sparse", d.n_sparse, max(t2 - t1, 1e-9))
-        return self.merge_fn(dense_res, sparse_res), d
+        self._results.clear()
+        rep = self.runtime.parallel_for(
+            num_items=self.num_items,
+            policy={"dense": (0, d.n_dense),
+                    "sparse": (d.n_dense, self.num_items)},
+            engine="inline",
+        )
+        for path in ("dense", "sparse"):
+            items = rep.per_worker_items.get(path, 0)
+            if items:
+                self.tracker.update(path, items, rep.per_worker_busy[path])
+        merged = self.merge_fn(self._results.get("dense"), self._results.get("sparse"))
+        return merged, d
 
     def converge(self, rounds: int = 5) -> SplitDecision:
         """Run the measure→rebalance loop until the split stabilizes."""

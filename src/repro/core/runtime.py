@@ -1,0 +1,511 @@
+"""HeteroRuntime — the unified async runtime of the ENEAC reproduction.
+
+The paper's Fig. 2 pipeline is one loop: register heterogeneous compute
+units, hand each idle unit a chunk of the iteration space the moment it
+completes the previous one, and adapt chunk sizes from measured
+throughput.  Before this module the three pillars of that loop —
+:class:`~repro.core.scheduler.MultiDynamicScheduler` (chunking policy),
+:class:`~repro.core.interrupts.AsyncEngine` / ``PollingEngine``
+(completion mechanism), and the workload adapters
+(:class:`~repro.core.parallel_for.HybridExecutor`, the serving refill
+loop, the Table-1 harness) — were wired ad hoc at every call site.
+:class:`HeteroRuntime` is the one front door:
+
+    rt = HeteroRuntime()
+    rt.register_unit("acc0", WorkerKind.ACC, speed=8e4, work_fn=acc_work)
+    rt.register_unit("cc0", WorkerKind.CC, speed=1e4, work_fn=cc_work)
+    report = rt.parallel_for(num_items=4096, policy="multidynamic",
+                             engine="interrupt", acc_chunk=256)
+
+Orthogonal knobs, matching the paper's ablation axes:
+
+* ``policy`` — how the space is chunked: ``"multidynamic"`` (the paper's
+  adaptive scheme), ``"static"`` (even pre-split baseline), ``"oracle"``
+  (throughput-proportional pre-split), or an explicit ``{unit: (start,
+  stop)}`` mapping for externally-decided splits.
+* ``engine`` — how completions are observed: ``"interrupt"`` (per-unit
+  host threads sleeping on completion events — §3.2), ``"polling"``
+  (single busy-wait driver — the no-interrupt baseline), ``"inline"``
+  (deterministic single-threaded serial execution, for tests).
+* ``clock`` — :class:`WallClock` for real execution, or
+  :class:`SimulatedClock` for deterministic virtual-time runs: unit
+  latencies come from registered ``speed`` priors and an optional
+  per-item cost vector, no thread ever sleeps, and scheduler dynamics
+  (adaptation, completion order, makespan) are exactly reproducible.
+
+Every run returns a :class:`~repro.core.interrupts.RunReport` carrying
+makespan, per-unit utilization, load balance, and the exact coverage
+spans — the invariants the test suite checks.
+"""
+
+from __future__ import annotations
+
+import heapq
+import threading
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple, Union
+
+from .interrupts import AsyncEngine, PollingEngine, RunReport
+from .scheduler import (
+    Chunk,
+    MultiDynamicScheduler,
+    OracleStaticScheduler,
+    StaticScheduler,
+    WorkerKind,
+    WorkerState,
+)
+
+__all__ = [
+    "HeteroRuntime",
+    "SimulatedClock",
+    "UnitSpec",
+    "WallClock",
+    "WorkQueue",
+]
+
+WorkFn = Callable[[Chunk], None]
+POLICIES = ("multidynamic", "static", "oracle")
+ENGINES = ("interrupt", "polling", "inline")
+
+
+# ---------------------------------------------------------------------------
+# clocks
+# ---------------------------------------------------------------------------
+class WallClock:
+    """Real time — units run their actual work functions."""
+
+    def now(self) -> float:
+        return time.perf_counter()
+
+
+class SimulatedClock:
+    """Virtual time — unit latencies are modelled, nothing sleeps.
+
+    ``parallel_for`` advances this clock event-by-event, so scheduler
+    behaviour (chunk adaptation, completion ordering, makespan) is exactly
+    deterministic and a full Table-1-style sweep runs in microseconds.
+    """
+
+    def __init__(self, start: float = 0.0) -> None:
+        self._t = float(start)
+
+    def now(self) -> float:
+        return self._t
+
+    def advance(self, dt: float) -> None:
+        if dt < 0:
+            raise ValueError(f"cannot advance the clock backwards ({dt})")
+        self._t += dt
+
+
+# ---------------------------------------------------------------------------
+# units
+# ---------------------------------------------------------------------------
+@dataclass
+class UnitSpec:
+    """A registered compute unit.
+
+    ``speed`` is the calibration prior in items/second: the oracle policy
+    splits proportionally to it, the multidynamic scheduler seeds its
+    throughput estimate with it, and :class:`SimulatedClock` runs use it as
+    the unit's virtual execution rate.  ``work_fn`` is the unit's default
+    chunk executor (overridable per ``parallel_for`` call).
+    """
+
+    name: str
+    kind: str = WorkerKind.CC
+    speed: Optional[float] = None
+    work_fn: Optional[WorkFn] = None
+
+
+# ---------------------------------------------------------------------------
+# uniform scheduler facade
+# ---------------------------------------------------------------------------
+class _FixedScheduler:
+    """Pre-decided ``{unit: (start, stop)}`` split (externally planned)."""
+
+    def __init__(self, assignments: Mapping[str, Tuple[int, int]]) -> None:
+        self._assignments: Dict[str, Optional[Chunk]] = {
+            w: Chunk(a, b, w) if b > a else None for w, (a, b) in assignments.items()
+        }
+
+    def next_chunk(self, worker: str, now: float = 0.0) -> Optional[Chunk]:
+        chunk = self._assignments.get(worker)
+        self._assignments[worker] = None
+        return chunk
+
+    def complete(self, worker: str, elapsed: float) -> None:
+        pass
+
+
+class _TrackedScheduler:
+    """Engine-facing facade over any chunking policy.
+
+    The engines (:class:`AsyncEngine`, :class:`PollingEngine`) and the
+    report builder need per-unit state, coverage history, and load-balance
+    metrics; only :class:`MultiDynamicScheduler` keeps those natively.
+    This facade adds uniform bookkeeping on top of every policy, so one
+    engine implementation drives them all.
+    """
+
+    def __init__(self, inner, unit_kinds: Mapping[str, str]) -> None:
+        self.inner = inner
+        self._lock = threading.Lock()
+        self._states: Dict[str, WorkerState] = {
+            n: WorkerState(name=n, kind=k) for n, k in unit_kinds.items()
+        }
+        self._outstanding: Dict[str, Chunk] = {}
+        self._history: List[Tuple[Chunk, float]] = []
+
+    @property
+    def workers(self) -> Dict[str, WorkerState]:
+        return dict(self._states)
+
+    def next_chunk(self, worker: str, now: float = 0.0) -> Optional[Chunk]:
+        with self._lock:
+            state = self._states[worker]
+            if state.busy:
+                raise RuntimeError(f"unit {worker!r} requested a chunk while busy")
+            chunk = self.inner.next_chunk(worker, now=now)
+            if chunk is None or chunk.size <= 0:
+                return None
+            state.busy = True
+            self._outstanding[worker] = chunk
+            return chunk
+
+    def complete(self, worker: str, elapsed: float) -> None:
+        with self._lock:
+            state = self._states[worker]
+            chunk = self._outstanding.pop(worker, None)
+            if chunk is None:
+                raise RuntimeError(f"completion from idle unit {worker!r}")
+            state.busy = False
+            state.items_done += chunk.size
+            state.chunks_done += 1
+            state.total_busy_time += max(elapsed, 1e-12)
+            self._history.append((chunk, elapsed))
+        self.inner.complete(worker, elapsed)
+
+    def coverage(self) -> List[Tuple[int, int]]:
+        with self._lock:
+            return sorted((c.start, c.stop) for c, _ in self._history)
+
+    def load_balance(self) -> float:
+        with self._lock:
+            times = [s.total_busy_time for s in self._states.values() if s.chunks_done]
+        if not times:
+            return 1.0
+        mean = sum(times) / len(times)
+        return max(times) / max(mean, 1e-12)
+
+
+# ---------------------------------------------------------------------------
+# serving-style incremental feed
+# ---------------------------------------------------------------------------
+class WorkQueue:
+    """Pull-based view of a run for callers that own their own step loop.
+
+    ``parallel_for`` drives units to completion; a continuous-batching
+    server instead interleaves scheduling with its own lockstep decode
+    steps.  ``acquire(unit)`` hands the unit its next chunk the moment it
+    is free (the completion-driven refill rule), ``complete(unit)``
+    reports it back, and ``report()`` closes the run with the same
+    :class:`RunReport` a ``parallel_for`` would produce.
+    """
+
+    def __init__(self, sched: _TrackedScheduler, clock) -> None:
+        self._sched = sched
+        self._clock = clock
+        self._issue: Dict[str, float] = {}
+        self._t0 = clock.now()
+
+    def acquire(self, unit: str) -> Optional[Chunk]:
+        chunk = self._sched.next_chunk(unit, now=self._clock.now())
+        if chunk is not None:
+            self._issue[unit] = self._clock.now()
+        return chunk
+
+    def complete(self, unit: str) -> None:
+        t0 = self._issue.pop(unit, self._clock.now())
+        self._sched.complete(unit, self._clock.now() - t0)
+
+    @property
+    def idle_units(self) -> List[str]:
+        return [n for n, s in self._sched.workers.items() if not s.busy]
+
+    def report(self) -> RunReport:
+        return _build_report(self._sched, self._clock.now() - self._t0)
+
+
+def _build_report(sched: _TrackedScheduler, wall: float) -> RunReport:
+    states = sched.workers
+    return RunReport(
+        wall_time=wall,
+        items=sum(s.items_done for s in states.values()),
+        chunks=sum(s.chunks_done for s in states.values()),
+        per_worker_items={n: s.items_done for n, s in states.items()},
+        per_worker_chunks={n: s.chunks_done for n, s in states.items()},
+        per_worker_busy={n: s.total_busy_time for n, s in states.items()},
+        load_balance=sched.load_balance(),
+        coverage=sched.coverage(),
+    )
+
+
+# ---------------------------------------------------------------------------
+# the runtime
+# ---------------------------------------------------------------------------
+class HeteroRuntime:
+    """One registry of heterogeneous units, many ways to run them."""
+
+    def __init__(self, *, clock=None) -> None:
+        self.clock = clock if clock is not None else WallClock()
+        self._units: Dict[str, UnitSpec] = {}
+
+    # -- unit registry ------------------------------------------------------
+    def register_unit(
+        self,
+        name: str,
+        kind: str = WorkerKind.CC,
+        *,
+        speed: Optional[float] = None,
+        work_fn: Optional[WorkFn] = None,
+    ) -> UnitSpec:
+        if kind not in (WorkerKind.ACC, WorkerKind.CC):
+            raise ValueError(f"unknown unit kind {kind!r}")
+        if name in self._units:
+            raise ValueError(f"duplicate unit {name!r}")
+        spec = UnitSpec(name=name, kind=kind, speed=speed, work_fn=work_fn)
+        self._units[name] = spec
+        return spec
+
+    def set_speed(self, name: str, speed: float) -> None:
+        self._units[name].speed = speed
+
+    @property
+    def units(self) -> Dict[str, UnitSpec]:
+        return dict(self._units)
+
+    def _resolve_units(self, units: Optional[Sequence[str]]) -> List[UnitSpec]:
+        names = list(units) if units is not None else list(self._units)
+        if not names:
+            raise ValueError("no units registered")
+        missing = [n for n in names if n not in self._units]
+        if missing:
+            raise ValueError(f"unknown units {missing}")
+        return [self._units[n] for n in names]
+
+    # -- scheduling policies ------------------------------------------------
+    def _make_scheduler(
+        self,
+        num_items: int,
+        specs: List[UnitSpec],
+        policy: Union[str, Mapping[str, Tuple[int, int]]],
+        acc_chunk: int,
+        scheduler_kwargs: Optional[dict],
+    ) -> _TrackedScheduler:
+        kinds = {s.name: s.kind for s in specs}
+        if isinstance(policy, Mapping):
+            inner = _FixedScheduler(policy)
+        elif policy == "multidynamic":
+            inner = MultiDynamicScheduler(num_items, acc_chunk, **(scheduler_kwargs or {}))
+            for s in specs:
+                inner.add_worker(s.name, s.kind, throughput=s.speed)
+        elif policy == "static":
+            inner = StaticScheduler(num_items, [s.name for s in specs])
+        elif policy == "oracle":
+            inner = OracleStaticScheduler(
+                num_items,
+                {s.name: (1.0 if s.speed is None else s.speed) for s in specs},
+            )
+        else:
+            raise ValueError(f"unknown policy {policy!r} (want {POLICIES} or a mapping)")
+        return _TrackedScheduler(inner, kinds)
+
+    def plan(
+        self,
+        num_items: int,
+        *,
+        units: Optional[Sequence[str]] = None,
+        policy: str = "oracle",
+        acc_chunk: int = 64,
+    ) -> Dict[str, Tuple[int, int]]:
+        """Dry-run split: the first chunk each unit would receive.
+
+        For the static policies this *is* the full partition; clients like
+        :class:`~repro.core.parallel_for.HybridExecutor` use it to place
+        work without running the engine.
+        """
+        specs = self._resolve_units(units)
+        sched = self._make_scheduler(num_items, specs, policy, acc_chunk, None)
+        out: Dict[str, Tuple[int, int]] = {}
+        for s in specs:
+            chunk = sched.next_chunk(s.name, now=0.0)
+            if chunk is not None:
+                out[s.name] = (chunk.start, chunk.stop)
+        return out
+
+    def work_queue(
+        self,
+        num_items: int,
+        *,
+        units: Optional[Sequence[str]] = None,
+        policy: Union[str, Mapping[str, Tuple[int, int]]] = "multidynamic",
+        acc_chunk: int = 1,
+        scheduler_kwargs: Optional[dict] = None,
+    ) -> WorkQueue:
+        """Open an incremental completion-driven feed over ``[0, num_items)``."""
+        specs = self._resolve_units(units)
+        sched = self._make_scheduler(num_items, specs, policy, acc_chunk, scheduler_kwargs)
+        return WorkQueue(sched, self.clock)
+
+    # -- the paper's parallel_for ------------------------------------------
+    def parallel_for(
+        self,
+        work_fn: Optional[WorkFn] = None,
+        num_items: int = 0,
+        *,
+        units: Optional[Sequence[str]] = None,
+        policy: Union[str, Mapping[str, Tuple[int, int]]] = "multidynamic",
+        engine: str = "interrupt",
+        acc_chunk: int = 64,
+        item_cost: Optional[Sequence[float]] = None,
+        poll_interval: float = 0.0,
+        scheduler_kwargs: Optional[dict] = None,
+    ) -> RunReport:
+        """Execute ``[0, num_items)`` across the registered units.
+
+        ``work_fn`` applies to every unit; omit it to use each unit's
+        registered ``work_fn``.  Under a :class:`SimulatedClock`, work
+        functions are optional — chunk latency is ``sum(item_cost[chunk])
+        / unit.speed`` in virtual time and any provided work functions are
+        still invoked (untimed) so callers can record side effects.
+        """
+        if work_fn is not None and not callable(work_fn):
+            raise TypeError(
+                f"first argument is the work function, got {work_fn!r}; "
+                "pass the space size as num_items=N"
+            )
+        if engine not in ENGINES:
+            raise ValueError(f"unknown engine {engine!r} (want one of {ENGINES})")
+        if num_items <= 0:
+            raise ValueError(f"num_items must be positive, got {num_items}")
+        specs = self._resolve_units(units)
+        sched = self._make_scheduler(num_items, specs, policy, acc_chunk, scheduler_kwargs)
+
+        simulated = isinstance(self.clock, SimulatedClock)
+        fns: Dict[str, Optional[WorkFn]] = {
+            s.name: (work_fn if work_fn is not None else s.work_fn) for s in specs
+        }
+        if not simulated:
+            missing = [n for n, f in fns.items() if f is None]
+            if missing:
+                raise ValueError(
+                    f"units {missing} have no work_fn (required on a wall clock)"
+                )
+
+        if simulated:
+            return self._run_simulated(
+                sched, specs, fns, engine, num_items, item_cost, poll_interval
+            )
+        if item_cost is not None:
+            raise ValueError("item_cost is only meaningful under SimulatedClock")
+        return self._run_wall(sched, fns, engine, poll_interval)
+
+    # -- wall-clock execution ----------------------------------------------
+    def _run_wall(
+        self,
+        sched: _TrackedScheduler,
+        fns: Dict[str, Optional[WorkFn]],
+        engine: str,
+        poll_interval: float,
+    ) -> RunReport:
+        if engine == "interrupt":
+            rep = AsyncEngine(sched, fns).run()
+        else:
+            # "inline" is exactly the polling driver without the busy-wait
+            # penalty: a deterministic serial round-robin on the caller
+            # thread.
+            interval = poll_interval if engine == "polling" else 0.0
+            rep = PollingEngine(sched, fns, poll_interval=interval).run()
+        rep.coverage = sched.coverage()
+        return rep
+
+    # -- virtual-time execution --------------------------------------------
+    def _run_simulated(
+        self,
+        sched: _TrackedScheduler,
+        specs: List[UnitSpec],
+        fns: Dict[str, Optional[WorkFn]],
+        engine: str,
+        num_items: int,
+        item_cost: Optional[Sequence[float]],
+        poll_interval: float,
+    ) -> RunReport:
+        clock: SimulatedClock = self.clock
+        # prefix sums so irregular per-item costs price a chunk in O(1)
+        if item_cost is not None:
+            if len(item_cost) != num_items:
+                raise ValueError(
+                    f"item_cost has {len(item_cost)} entries for {num_items} items"
+                )
+            prefix = [0.0]
+            for c in item_cost:
+                prefix.append(prefix[-1] + float(c))
+        else:
+            prefix = None
+        speeds = {s.name: (1.0 if s.speed is None else s.speed) for s in specs}
+
+        def cost(chunk: Chunk) -> float:
+            work = (
+                prefix[chunk.stop] - prefix[chunk.start]
+                if prefix is not None
+                else float(chunk.size)
+            )
+            return work / max(speeds[chunk.worker], 1e-12)
+
+        t0 = clock.now()
+        if engine == "interrupt":
+            # event-driven: all units progress concurrently in virtual time
+            heap: List[Tuple[float, int, str, Chunk, float]] = []
+            seq = 0
+            for s in specs:
+                chunk = sched.next_chunk(s.name, now=clock.now())
+                if chunk is not None:
+                    if fns[s.name] is not None:
+                        fns[s.name](chunk)
+                    dt = cost(chunk)
+                    heapq.heappush(heap, (clock.now() + dt, seq, s.name, chunk, dt))
+                    seq += 1
+            while heap:
+                finish, _, name, chunk, dt = heapq.heappop(heap)
+                clock.advance(max(finish - clock.now(), 0.0))
+                sched.complete(name, dt)
+                nxt = sched.next_chunk(name, now=clock.now())
+                if nxt is not None:
+                    if fns[name] is not None:
+                        fns[name](nxt)
+                    dt = cost(nxt)
+                    heapq.heappush(heap, (clock.now() + dt, seq, name, nxt, dt))
+                    seq += 1
+        else:
+            # polling/inline: one virtual driver serializes every unit (the
+            # paper's no-interrupt host thread); "polling" additionally pays
+            # the busy-wait overhead per dispatch.
+            names = [s.name for s in specs]
+            active = True
+            while active:
+                active = False
+                for name in names:
+                    chunk = sched.next_chunk(name, now=clock.now())
+                    if chunk is None:
+                        continue
+                    active = True
+                    if fns[name] is not None:
+                        fns[name](chunk)
+                    dt = cost(chunk)
+                    clock.advance(dt)
+                    if engine == "polling" and poll_interval:
+                        clock.advance(poll_interval)
+                    sched.complete(name, dt)
+        return _build_report(sched, clock.now() - t0)

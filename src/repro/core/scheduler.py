@@ -283,8 +283,10 @@ class OracleStaticScheduler:
             if i == len(items) - 1:
                 size = num_items - start
             else:
-                size = int(round(num_items * t / total))
-            self._assignments[w] = Chunk(start, start + size, w) if size else None
+                # clamp so rounding can never overshoot the space and leave
+                # the last worker a negative remainder
+                size = min(int(round(num_items * t / total)), num_items - start)
+            self._assignments[w] = Chunk(start, start + size, w) if size > 0 else None
             start += size
 
     def next_chunk(self, worker: str, now: float = 0.0) -> Optional[Chunk]:

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from ..core import moe_dispatch as md
+from ..parallel.compat import shard_map
 from ..parallel.mesh_rules import shard_hint
 from .layers import Builder
 from .ffn import ffn, ffn_params
@@ -239,7 +240,7 @@ def _moe_ffn_local(p, x: jax.Array, cfg: ModelConfig, rules) -> Tuple[jax.Array,
             return out.reshape(bb, ss, d).astype(xb.dtype), *aux
 
     fb_arg = p.get("fallback") if fb_specs is not None else None
-    out, aux_l, z_l, ov, lm = jax.shard_map(
+    out, aux_l, z_l, ov, lm = shard_map(
         local_fn,
         mesh=mesh,
         in_specs=(router_spec, w_in_spec, w_in_spec, w_out_spec,

@@ -1,0 +1,32 @@
+"""JAX version compatibility for manual-partitioning entry points.
+
+``shard_map`` has moved twice: it started life as
+``jax.experimental.shard_map.shard_map`` (replication checking via
+``check_rep``), and newer releases expose it as ``jax.shard_map`` with the
+argument renamed to ``check_vma``.  The repo targets whichever jax the
+container bakes in, so every internal call site goes through this shim
+instead of either spelling.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+__all__ = ["shard_map"]
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """Dispatch to the native ``shard_map`` of the installed jax."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )

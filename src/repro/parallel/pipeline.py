@@ -28,6 +28,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from .compat import shard_map
+
 __all__ = ["pipeline_apply", "stage_partition"]
 
 
@@ -101,7 +103,7 @@ def pipeline_apply(
 
     other_axes = [a for a in mesh.axis_names if a != axis]
     param_spec = jax.tree.map(lambda _: P(axis), stacked_params)
-    return jax.shard_map(
+    return shard_map(
         pipelined,
         mesh=mesh,
         in_specs=(jax.tree.map(lambda _: P(axis), stacked_params), P()),

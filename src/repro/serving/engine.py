@@ -14,6 +14,15 @@ of the completion-driven mechanism):
   ``static`` grows with generation-length variance — the serving
   equivalent of the paper's irregular-workload result.
 
+Request admission is a thin client of
+:class:`~repro.core.runtime.HeteroRuntime`: each decode slot registers as
+a compute unit and ``run()`` opens a :class:`~repro.core.runtime.WorkQueue`
+over the submitted requests (unit-size chunks), so which request a freed
+slot picks up — and all per-slot utilization/coverage accounting — comes
+from the same completion-driven scheduler that powers ``parallel_for``.
+The closing :class:`~repro.core.interrupts.RunReport` is exposed as
+``last_run_report``.
+
 Slot state lives in the batched KV caches; a new request is prefilled
 with batch=1 and spliced into its slot (pytree scatter on the batch dim).
 """
@@ -29,6 +38,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.runtime import HeteroRuntime, WorkQueue
+from ..core.scheduler import WorkerKind
 from ..models import Model
 from .sampling import sample
 
@@ -98,6 +109,15 @@ class ServingEngine:
         self.results: Dict[int, RequestResult] = {}
         self._submit_times: Dict[int, float] = {}
 
+        # decode slots are the compute units; run() opens a WorkQueue over
+        # the submitted requests so refill is completion-driven
+        self.runtime = HeteroRuntime()
+        for b in range(slots):
+            self.runtime.register_unit(f"slot{b}", WorkerKind.ACC)
+        self._feed: Optional[WorkQueue] = None
+        self._pending: List[Request] = []
+        self.last_run_report = None
+
         self.caches = model.init_caches(slots, max_len)
         self.active: List[Optional[Request]] = [None] * slots
         self.generated: List[List[int]] = [[] for _ in range(slots)]
@@ -115,9 +135,12 @@ class ServingEngine:
         self.queue.append(req)
 
     def _admit(self, slot: int) -> bool:
-        if not self.queue:
+        if self._feed is None:
             return False
-        req = self.queue.popleft()
+        chunk = self._feed.acquire(f"slot{slot}")
+        if chunk is None:
+            return False
+        req = self._pending[chunk.start]
         prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
         single = self.model.init_caches(1, self.max_len)
         logits, single = self.model.prefill_from(self.params, {"tokens": prompt}, single)
@@ -141,6 +164,8 @@ class ServingEngine:
         )
         self.active[slot] = None
         self.generated[slot] = []
+        if self._feed is not None:
+            self._feed.complete(f"slot{slot}")
 
     def _slot_done(self, slot: int) -> bool:
         req = self.active[slot]
@@ -155,12 +180,27 @@ class ServingEngine:
     def run(self) -> Dict[int, RequestResult]:
         """Serve until the queue drains and all slots finish."""
         while True:
-            # admit work into free slots
+            # snapshot newly-submitted requests into a fresh feed whenever
+            # the previous one has fully drained (feeds are per-batch: the
+            # scheduler's iteration space is fixed at open time)
+            if self._feed is None and self.queue:
+                self._pending = list(self.queue)
+                self.queue.clear()
+                self._feed = self.runtime.work_queue(
+                    len(self._pending), policy="multidynamic", acc_chunk=1,
+                )
+            # admit work into free slots (completion-driven in continuous
+            # mode; batch-granularity in static mode — the polling analogue)
             if self.mode == "continuous" or all(a is None for a in self.active):
                 for b in range(self.slots):
                     if self.active[b] is None:
                         self._admit(b)
-            if all(a is None for a in self.active) and not self.queue:
+            if all(a is None for a in self.active):
+                if self._feed is not None:
+                    self.last_run_report = self._feed.report()
+                    self._feed = None
+                if self.queue:  # submissions landed after the snapshot
+                    continue
                 return dict(self.results)
 
             tokens = jnp.asarray(self.last_token, jnp.int32)[:, None]

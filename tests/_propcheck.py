@@ -1,0 +1,134 @@
+"""Dependency-free property-testing shim with a hypothesis-shaped API.
+
+The CI container has no ``hypothesis``; the property tests in this suite
+only use a small, well-defined slice of its API (``given`` with keyword
+strategies, ``settings(max_examples=..., deadline=...)``, and the
+``integers`` / ``floats`` / ``lists`` strategies).  This module provides
+that slice over seeded pseudo-random sampling so the same test bodies run
+unchanged:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _propcheck import given, settings, strategies as st
+
+Sampling is deterministic per test (seeded from the test's qualified
+name), so failures reproduce run-to-run.  On assertion failure the
+falsifying example is attached to the exception message, hypothesis-style.
+There is no shrinking — examples are reported as drawn.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+import zlib
+from typing import Any, Callable, Dict
+
+__all__ = ["given", "settings", "strategies", "st"]
+
+_DEFAULT_MAX_EXAMPLES = 100
+
+
+class SearchStrategy:
+    """A sampler: ``example(rng) -> value``."""
+
+    def __init__(self, sample: Callable[[random.Random], Any], repr_: str) -> None:
+        self._sample = sample
+        self._repr = repr_
+
+    def example(self, rng: random.Random) -> Any:
+        return self._sample(rng)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return self._repr
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: rng.randint(min_value, max_value),
+        f"integers({min_value}, {max_value})",
+    )
+
+
+def floats(min_value: float, max_value: float) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: rng.uniform(min_value, max_value),
+        f"floats({min_value}, {max_value})",
+    )
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: bool(rng.getrandbits(1)), "booleans()")
+
+
+def sampled_from(options) -> SearchStrategy:
+    opts = list(options)
+    return SearchStrategy(lambda rng: rng.choice(opts), f"sampled_from({opts!r})")
+
+
+def lists(elements: SearchStrategy, *, min_size: int = 0, max_size: int = 10) -> SearchStrategy:
+    def sample(rng: random.Random):
+        n = rng.randint(min_size, max_size)
+        return [elements.example(rng) for _ in range(n)]
+
+    return SearchStrategy(sample, f"lists({elements!r}, {min_size}, {max_size})")
+
+
+strategies = types.SimpleNamespace(
+    integers=integers,
+    floats=floats,
+    booleans=booleans,
+    sampled_from=sampled_from,
+    lists=lists,
+)
+st = strategies  # common alias
+
+
+def settings(*, max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    """Record run parameters on the test; order-independent with ``given``."""
+
+    def deco(fn):
+        fn._propcheck_settings = {"max_examples": max_examples}
+        return fn
+
+    return deco
+
+
+def given(**strategy_kwargs: SearchStrategy):
+    """Run the test once per drawn example (keyword strategies only)."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            conf = (
+                getattr(wrapper, "_propcheck_settings", None)
+                or getattr(fn, "_propcheck_settings", None)
+                or {}
+            )
+            max_examples = conf.get("max_examples", _DEFAULT_MAX_EXAMPLES)
+            seed = zlib.crc32(fn.__qualname__.encode())
+            for i in range(max_examples):
+                rng = random.Random(seed * 1_000_003 + i)
+                example: Dict[str, Any] = {
+                    name: strat.example(rng)
+                    for name, strat in strategy_kwargs.items()
+                }
+                try:
+                    fn(*args, **kwargs, **example)
+                except Exception as exc:
+                    raise AssertionError(
+                        f"falsifying example ({i + 1}/{max_examples}): "
+                        f"{fn.__qualname__}({example!r})"
+                    ) from exc
+
+        # Hide the strategy-bound parameters from pytest so it does not
+        # look for fixtures named after them.
+        sig = inspect.signature(fn)
+        params = [p for n, p in sig.parameters.items() if n not in strategy_kwargs]
+        wrapper.__signature__ = sig.replace(parameters=params)
+        return wrapper
+
+    return deco

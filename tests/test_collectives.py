@@ -16,6 +16,7 @@ PROGRAM = textwrap.dedent("""
     import jax, jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
     from repro.parallel.collectives import compressed_psum
+    from repro.parallel.compat import shard_map
 
     mesh = jax.make_mesh((8,), ("data",))
     x = jax.random.normal(jax.random.PRNGKey(0), (8, 64, 32)) * 0.01
@@ -27,8 +28,8 @@ PROGRAM = textwrap.dedent("""
         return rel
 
     with mesh:
-        rel = jax.shard_map(f, mesh=mesh, in_specs=P("data"), out_specs=P(),
-                            check_vma=False)(x)
+        rel = shard_map(f, mesh=mesh, in_specs=P("data"), out_specs=P(),
+                        check_vma=False)(x)
     rel = float(rel)
     assert rel < 0.02, rel
     print("COMPRESSED_PSUM_OK", rel)

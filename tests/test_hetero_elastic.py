@@ -3,7 +3,11 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # CI container has no hypothesis; use the vendored shim
+    from _propcheck import given, settings, strategies as st
 
 from repro.core import (
     ElasticMeshManager,

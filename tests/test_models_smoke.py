@@ -10,6 +10,8 @@ from repro.configs import ARCH_NAMES, all_configs, get_config
 from repro.configs.base import ParallelConfig
 from repro.models import make_model
 
+pytestmark = pytest.mark.slow  # full per-arch sweep; gated out of the fast tier
+
 KEY = jax.random.PRNGKey(0)
 
 

@@ -4,10 +4,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # CI container has no hypothesis; use the vendored shim
+    from _propcheck import given, settings, strategies as st
 
 from repro.core import moe_dispatch as md
 from repro.core.moe_dispatch import CapacityController
+
+pytestmark = pytest.mark.slow  # property sweep retraces jax per example
 
 
 def _plan(T=32, E=4, k=2, C=8, seed=0):

@@ -16,6 +16,8 @@ from repro.optim import AdamW, clip_by_global_norm, warmup_cosine
 from repro.optim.compression import CompressionState, ef_compress_tree, init_state
 from repro.serving import Request, ServingEngine
 
+pytestmark = pytest.mark.slow  # end-to-end substrate tier (model init + serving)
+
 
 class TestAdamW:
     def test_quadratic_convergence(self):
