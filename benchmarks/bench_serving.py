@@ -34,10 +34,21 @@ def serving_rows(*, quick: bool = False) -> List[Tuple[str, float, str]]:
         eng.run()
         wall = time.perf_counter() - t0
         rep = eng.throughput_report()
+        # per-slot coverage/utilization from the runtime's RunReport of the
+        # final batch (the ROADMAP's last_run_report exposure)
+        run_rep = eng.last_run_report
+        slot_cols = ""
+        if run_rep is not None:
+            utils = run_rep.utilization.values()
+            slot_cols = (
+                f";load_balance={run_rep.load_balance:.3f}"
+                f";slot_util_mean={sum(utils) / len(utils):.3f}"
+                f";slot_items={'/'.join(str(v) for v in run_rep.per_worker_items.values())}"
+            )
         rows.append((
             f"serving_{mode}",
             wall / max(rep["steps"], 1) * 1e6,
             f"us_per_step;tok_per_step={rep['tokens_per_step']:.3f};"
-            f"steps={rep['steps']};tokens={rep['tokens']}",
+            f"steps={rep['steps']};tokens={rep['tokens']}" + slot_cols,
         ))
     return rows

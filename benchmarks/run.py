@@ -39,10 +39,12 @@ def main() -> None:
         from benchmarks.table1_eneac import chunk_sweep, table1
         for bench in ("hotspot", "spmm"):
             t1 = table1(bench, quick=quick)
-            rows += [(n, 1e3 / max(thr, 1e-9), f"throughput={thr:.2f}items_per_ms")
-                     for n, thr, _ in t1]
-        rows += [(n, 1e3 / max(thr, 1e-9), f"throughput={thr:.2f}items_per_ms")
-                 for n, thr, _ in chunk_sweep(quick=quick)]
+            rows += [(n, 1e3 / max(thr, 1e-9),
+                      f"throughput={thr:.2f}items_per_ms;load_balance={lb:.2f}")
+                     for n, thr, _, lb, _um, _un in t1]
+        rows += [(n, 1e3 / max(thr, 1e-9),
+                  f"throughput={thr:.2f}items_per_ms;load_balance={lb:.2f}")
+                 for n, thr, _, lb, _um, _un in chunk_sweep(quick=quick)]
 
     from benchmarks.roofline import roofline_rows
     rows += roofline_rows()

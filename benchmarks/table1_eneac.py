@@ -26,7 +26,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.paper_eneac import HotspotConfig, SpmmConfig, TABLE1_CONFIGS
-from repro.core import HeteroRuntime, WorkerKind
+from repro.core import HeteroRuntime, ShardedSpace, WorkerKind
+from repro.core.interrupts import RunReport
 from repro.kernels.hotspot.ref import hotspot_step_ref
 from repro.kernels.spmm.ref import make_problem, spmm_ell_ref, to_block_ell
 from repro.kernels.spmm.ops import pad_rhs
@@ -129,9 +130,15 @@ def calibrate_spmm(rows: int = 4096, cols: int = 4096, n: int = 128) -> Dict[str
 def run_config(
     units: str, port: str, interrupts: bool,
     *, n_items: int, acc_chunk: int, t_cc: float, t_acc: float,
-    hp_penalty: float, time_scale: float = 1.0,
-) -> float:
-    """Returns throughput in items/ms (paper units)."""
+    hp_penalty: float, time_scale: float = 1.0, shards: int = 1,
+) -> Tuple[float, RunReport]:
+    """Returns (throughput in items/ms — paper units, the full RunReport).
+
+    ``shards > 1`` iterates a :class:`ShardedSpace` instead of the flat
+    range: each shard gets its own replica of the unit set and its own
+    scheduler/engine (concurrent host threads), modelling one SoC per
+    shard over a slice of the global space.
+    """
     rt = HeteroRuntime()
 
     def worker(t_item):
@@ -151,14 +158,23 @@ def run_config(
     # burns cycles checking completion); CC-only has nothing to poll — the
     # host threads ARE the compute units.
     engine = "interrupt" if (interrupts or units == "cc") else "polling"
+    space = ShardedSpace(n_items, shards) if shards > 1 else None
     rep = rt.parallel_for(
-        num_items=n_items, policy="multidynamic", engine=engine,
-        acc_chunk=acc_chunk,
+        num_items=0 if space is not None else n_items, space=space,
+        policy="multidynamic", engine=engine, acc_chunk=acc_chunk,
     )
-    return rep.items / (rep.wall_time / time_scale) / 1e3
+    return rep.items / (rep.wall_time / time_scale) / 1e3, rep
 
 
-def table1(benchmark: str, *, quick: bool = False) -> List[Tuple[str, float, str]]:
+def report_columns(rep: RunReport) -> Tuple[float, float, float]:
+    """(load_balance, util_mean, util_min) — the columns the summary prints."""
+    utils = list(rep.utilization.values())
+    return rep.load_balance, sum(utils) / len(utils), min(utils)
+
+
+def table1(
+    benchmark: str, *, quick: bool = False, shards: int = 1
+) -> List[Tuple[str, float, str, float, float, float]]:
     if benchmark == "hotspot":
         cal = calibrate_hotspot(256 if quick else 512)
         n_items, acc_chunk = cal["items"], (64 if quick else 128)
@@ -177,14 +193,17 @@ def table1(benchmark: str, *, quick: bool = False) -> List[Tuple[str, float, str
     target_s = 1.0 if quick else 2.5
     time_scale = target_s / (n_items * t_cc)
     rows = []
+    suffix = f"_x{shards}shards" if shards > 1 else ""
     for cid, label, units, port, interrupts in TABLE1_CONFIGS:
-        thr = run_config(
+        thr, rep = run_config(
             units, port or "hpc", interrupts,
             n_items=n_items, acc_chunk=acc_chunk,
             t_cc=t_cc, t_acc=t_acc, hp_penalty=hp_penalty,
-            time_scale=time_scale,
+            time_scale=time_scale, shards=shards,
         )
-        rows.append((f"table1_{benchmark}_{cid}_{label}", thr, "items_per_ms"))
+        lb, u_mean, u_min = report_columns(rep)
+        rows.append((f"table1_{benchmark}_{cid}_{label}{suffix}", thr,
+                     "items_per_ms", lb, u_mean, u_min))
     return rows
 
 
@@ -198,12 +217,14 @@ def chunk_sweep(benchmark: str = "hotspot", *, quick: bool = False):
     rows = []
     sweep = sorted({16, 32, 64, 128, 256, n_items // 4, n_items // 2})
     for chunk in sweep:
-        thr = run_config(
+        thr, rep = run_config(
             "hybrid", "hpc", True, n_items=n_items, acc_chunk=chunk,
             t_cc=cal["cc"], t_acc=cal["acc_hpc"], hp_penalty=hp_penalty,
             time_scale=time_scale,
         )
-        rows.append((f"chunksweep_{benchmark}_c{chunk}", thr, "items_per_ms"))
+        lb, u_mean, u_min = report_columns(rep)
+        rows.append((f"chunksweep_{benchmark}_c{chunk}", thr, "items_per_ms",
+                     lb, u_mean, u_min))
     return rows
 
 
@@ -214,11 +235,16 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true", help="reduced sizes (CI-scale)")
     ap.add_argument("--benchmarks", nargs="+", default=["hotspot", "spmm"],
                     choices=["hotspot", "spmm"])
+    ap.add_argument("--shards", type=int, default=1,
+                    help="host shards: each runs its own scheduler/engine "
+                         "over a slice of the space (ShardedSpace)")
     args = ap.parse_args()
-    print("name,throughput,unit")
+    print("name,throughput,unit,load_balance,util_mean,util_min")
     for bench in args.benchmarks:
-        for name, thr, unit in table1(bench, quick=args.quick):
-            print(f"{name},{thr:.3f},{unit}")
+        for name, thr, unit, lb, u_mean, u_min in table1(
+            bench, quick=args.quick, shards=args.shards
+        ):
+            print(f"{name},{thr:.3f},{unit},{lb:.3f},{u_mean:.3f},{u_min:.3f}")
 
 
 if __name__ == "__main__":

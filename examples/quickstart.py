@@ -8,7 +8,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import HeteroRuntime, SimulatedClock, WorkerKind
+from repro.core import (
+    ElasticSchedule,
+    HeteroRuntime,
+    ShardedSpace,
+    SimulatedClock,
+    TiledSpace,
+    WorkerKind,
+)
 from repro.models import make_model
 
 # ---------------------------------------------------------------- models --
@@ -62,3 +69,30 @@ vrep = sim.parallel_for(num_items=4000, policy="multidynamic",
 util = {k: f"{v:.2f}" for k, v in vrep.utilization.items()}
 print(f"[virtual]  makespan={vrep.makespan * 1e3:.2f}ms (virtual), "
       f"utilization={util}")
+
+# --------------------------------------------------------------- spaces --
+# parallel_for iterates an IterationSpace.  num_items=N is sugar for
+# FlatSpace(N); a ShardedSpace splits the global space across host shards
+# (one scheduler/engine per shard, merged report); a TiledSpace hands the
+# scheduler 2D kernel tiles (hotspot stencils, block-ELL SPMM rows).
+srep = sim.parallel_for(space=ShardedSpace(8000, num_shards=2),
+                        policy="multidynamic", engine="interrupt",
+                        acc_chunk=256)
+print(f"[sharded]  {srep.num_shards} shards, items={srep.items}, "
+      f"cross-shard balance={srep.cross_shard_balance:.3f}")
+
+tiles = TiledSpace(grid=(512, 512), tile=(128, 128))   # 4x4 = 16 tiles
+trep = sim.parallel_for(space=tiles, policy="multidynamic",
+                        engine="interrupt", acc_chunk=4)
+print(f"[tiled]    {tiles.describe()}: {trep.items} tiles scheduled")
+
+# -------------------------------------------------------------- elastic --
+# Units may join/leave mid-run (SimulatedClock): a departing unit's
+# in-flight chunk is requeued to the survivors, a joining unit starts
+# stealing immediately, and the events land in RunReport.events.
+events = ElasticSchedule().leave(0.01, "cc0").join(0.015, "cc2", kind="cc",
+                                                   speed=2e4)
+erep = sim.parallel_for(num_items=4000, policy="multidynamic",
+                        engine="interrupt", acc_chunk=256, elastic=events)
+print(f"[elastic]  coverage intact={erep.coverage[0][0] == 0 and erep.coverage[-1][1] == 4000}, "
+      f"events={[(e['action'], e['unit']) for e in erep.events]}")

@@ -10,17 +10,21 @@
   fallback (the LM-native instantiation of MultiDynamic).
 * :mod:`repro.core.parallel_for` — hybrid MXU/VPU executor for irregular
   workloads (SPMM).
+* :mod:`repro.core.space` — iteration spaces: flat ranges, 2D kernel
+  tile grids, and host-sharded spaces with merged global reports.
 * :mod:`repro.core.runtime` — :class:`HeteroRuntime`, the unified front
-  door: scheduler policy × completion engine × clock behind one
-  ``parallel_for`` (the paper's Fig. 2 pipeline end-to-end).
+  door: scheduler policy × completion engine × clock × iteration space
+  behind one ``parallel_for`` (the paper's Fig. 2 pipeline end-to-end),
+  with elastic unit join/leave under :class:`SimulatedClock`.
 """
 
 from .scheduler import Chunk, MultiDynamicScheduler, OracleStaticScheduler, StaticScheduler, WorkerKind
 from .interrupts import AsyncEngine, CompletionEvent, PollingEngine, RunReport
+from .space import FlatSpace, IterationSpace, ShardedSpace, TiledSpace
 from .runtime import HeteroRuntime, SimulatedClock, UnitSpec, WallClock, WorkQueue
 from .hetero import HeteroPartition, HeterogeneousPartitioner, ThroughputTracker
 from .straggler import MitigationPlan, StragglerDetector, StragglerMitigator, StragglerReport
-from .elastic import DeviceHealth, ElasticMeshManager, RescalePlan
+from .elastic import DeviceHealth, ElasticEvent, ElasticMeshManager, ElasticSchedule, RescalePlan
 from .parallel_for import HybridExecutor, SplitDecision
 
 __all__ = [
@@ -29,6 +33,12 @@ __all__ = [
     "UnitSpec",
     "WallClock",
     "WorkQueue",
+    "IterationSpace",
+    "FlatSpace",
+    "TiledSpace",
+    "ShardedSpace",
+    "ElasticEvent",
+    "ElasticSchedule",
     "Chunk",
     "MultiDynamicScheduler",
     "StaticScheduler",

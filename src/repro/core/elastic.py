@@ -1,11 +1,29 @@
-"""Elastic scaling: node-failure handling and mesh reconstruction.
+"""Elastic scaling: unit join/leave, node-failure handling, mesh rebuild.
 
 The paper reprograms the FPGA with different accelerator counts and the
-scheduler just keeps working with whatever units exist.  The pod-scale
-analogue: when a host (8 chips) or a whole slice dies mid-run, the job must
-(1) detect it, (2) compute the largest still-coherent mesh from surviving
-hardware, (3) re-shard the latest checkpoint onto the new mesh, and
-(4) resume — rather than sitting in a barrier forever.
+scheduler just keeps working with whatever units exist.  This module
+carries that property across two granularities:
+
+* **Unit level** (:class:`ElasticEvent`, :class:`ElasticSchedule`) — a
+  timeline of compute units joining or leaving *mid-run*.
+  :meth:`~repro.core.runtime.HeteroRuntime.parallel_for` consumes a
+  schedule under :class:`~repro.core.runtime.SimulatedClock`: when a
+  unit leaves, its in-flight chunk is requeued and re-issued to a
+  surviving unit (exact-once coverage is an invariant the tests pin);
+  when a unit joins, it starts stealing chunks immediately, exactly as a
+  freshly programmed FPGA block enters the paper's loop.  Every event is
+  recorded in the run's :class:`~repro.core.interrupts.RunReport`.
+* **Mesh level** (:class:`ElasticMeshManager`, :class:`RescalePlan`) —
+  the pod-scale analogue: when a host (8 chips) or a whole slice dies
+  mid-run, the job must (1) detect it, (2) compute the largest
+  still-coherent mesh from surviving hardware, (3) re-shard the latest
+  checkpoint onto the new mesh, and (4) resume — rather than sitting in
+  a barrier forever.
+
+The two meet in :meth:`ElasticSchedule.from_mesh`: bind runtime units to
+the mesh's failure domains (hosts) and a fault timeline, and device
+failures tracked by the mesh manager become unit-leave events for the
+scheduler — the registry hook the ROADMAP names.
 
 This module is deliberately runtime-agnostic: it reasons over abstract
 device inventories so it is unit-testable on CPU, and `launch/train.py`
@@ -17,9 +35,112 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
-__all__ = ["DeviceHealth", "RescalePlan", "ElasticMeshManager"]
+__all__ = [
+    "DeviceHealth",
+    "RescalePlan",
+    "ElasticMeshManager",
+    "ElasticEvent",
+    "ElasticSchedule",
+]
+
+
+@dataclass(frozen=True)
+class ElasticEvent:
+    """One unit joining or leaving the run at virtual time ``t``.
+
+    ``t`` is *run-relative*: seconds of virtual time after the run's
+    first dispatch, so the same schedule replays identically on a
+    runtime whose clock has already advanced through earlier runs.
+    ``kind``/``speed`` describe the joining unit (same semantics as
+    :class:`~repro.core.runtime.UnitSpec`); both are ignored for leaves.
+    """
+
+    t: float
+    action: str                    # "join" | "leave"
+    unit: str
+    kind: str = "cc"
+    speed: Optional[float] = None
+
+    def __post_init__(self) -> None:
+        if self.action not in ("join", "leave"):
+            raise ValueError(f"action must be join|leave, got {self.action!r}")
+        if self.t < 0:
+            raise ValueError(f"event time must be >= 0, got {self.t}")
+
+
+class ElasticSchedule:
+    """An ordered timeline of :class:`ElasticEvent`s for one run.
+
+    Build directly::
+
+        sched = ElasticSchedule()
+        sched.leave(0.5, "cc0")
+        sched.join(0.8, "cc9", kind="cc", speed=2e3)
+
+    or derive unit events from mesh-level failures via :meth:`from_mesh`.
+    """
+
+    def __init__(self, events: Sequence[ElasticEvent] = ()) -> None:
+        self._events: List[ElasticEvent] = list(events)
+
+    def leave(self, t: float, unit: str) -> "ElasticSchedule":
+        self._events.append(ElasticEvent(t=t, action="leave", unit=unit))
+        return self
+
+    def join(
+        self, t: float, unit: str, *, kind: str = "cc", speed: Optional[float] = None
+    ) -> "ElasticSchedule":
+        self._events.append(
+            ElasticEvent(t=t, action="join", unit=unit, kind=kind, speed=speed)
+        )
+        return self
+
+    @property
+    def events(self) -> List[ElasticEvent]:
+        """Events in time order (stable for ties: insertion order)."""
+        return sorted(self._events, key=lambda e: e.t)
+
+    def __len__(self) -> int:
+        return len(self._events)
+
+    def __iter__(self):
+        return iter(self.events)
+
+    @classmethod
+    def from_mesh(
+        cls,
+        manager: "ElasticMeshManager",
+        bindings: Mapping[str, int],
+        faults: Sequence[Tuple[float, int]],
+        joins: Sequence[ElasticEvent] = (),
+    ) -> "ElasticSchedule":
+        """Unit-leave events from mesh failure domains.
+
+        ``bindings`` maps unit name -> host id; ``faults`` is a timeline
+        of ``(t, device_id)`` failures applied to ``manager`` (so its
+        health book and any later :meth:`ElasticMeshManager.plan` stay
+        consistent with the run).  A device failure takes out its whole
+        host, so every unit bound to that host leaves at the fault time.
+        ``joins`` are appended verbatim — replacement capacity admitted
+        by the operator.
+        """
+        sched = cls()
+        departed: set = set()
+        for t, device_id in sorted(faults):
+            before = set(manager.lost_ids)
+            manager.mark_failed(device_id)
+            lost_hosts = {
+                manager.host_of(d) for d in manager.lost_ids if d not in before
+            }
+            for unit, host in bindings.items():
+                if host in lost_hosts and unit not in departed:
+                    departed.add(unit)
+                    sched.leave(t, unit)
+        for ev in joins:
+            sched._events.append(ev)
+        return sched
 
 
 @dataclass
@@ -97,6 +218,9 @@ class ElasticMeshManager:
         for d in self._devices.values():
             if d.host_id == host:
                 d.healthy = False
+
+    def host_of(self, device_id: int) -> int:
+        return self._devices[device_id].host_id
 
     @property
     def healthy_ids(self) -> List[int]:

@@ -76,11 +76,35 @@ class RunReport:
     # Sorted (start, stop) spans of completed chunks; filled by
     # :class:`repro.core.runtime.HeteroRuntime` (None for bare engine runs).
     coverage: Optional[List[tuple]] = None
+    # Elasticity timeline: one dict per unit join/leave processed during the
+    # run — {"t", "action", "unit", "requeued": (start, stop) | None}.
+    events: Optional[List[dict]] = None
+    # Per-shard sub-reports when the run iterated a ShardedSpace; unit keys
+    # in the merged per_worker_* maps are prefixed "s{shard}/".
+    shard_reports: Optional[List["RunReport"]] = None
 
     @property
     def throughput(self) -> float:
         """Items per millisecond — the paper's metric."""
         return self.items / max(self.wall_time * 1e3, 1e-12)
+
+    @property
+    def num_shards(self) -> int:
+        return len(self.shard_reports) if self.shard_reports else 1
+
+    @property
+    def cross_shard_balance(self) -> float:
+        """max shard makespan / mean shard makespan (1.0 = perfect).
+
+        The sharded analogue of ``load_balance``: how evenly the global
+        space was split across host shards, each of which load-balances
+        internally via its own scheduler.
+        """
+        if not self.shard_reports:
+            return 1.0
+        spans = [r.wall_time for r in self.shard_reports]
+        mean = sum(spans) / len(spans)
+        return max(spans) / max(mean, 1e-12)
 
     @property
     def makespan(self) -> float:

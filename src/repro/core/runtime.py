@@ -32,10 +32,23 @@ Orthogonal knobs, matching the paper's ablation axes:
   latencies come from registered ``speed`` priors and an optional
   per-item cost vector, no thread ever sleeps, and scheduler dynamics
   (adaptation, completion order, makespan) are exactly reproducible.
+* ``space`` — *what* is iterated: a plain ``num_items`` (sugar for
+  :class:`~repro.core.space.FlatSpace`), a
+  :class:`~repro.core.space.TiledSpace` handing the scheduler 2D kernel
+  tiles, or a :class:`~repro.core.space.ShardedSpace` that runs one
+  scheduler + engine per host shard and merges the per-shard reports
+  into a global one (coverage union, cross-shard balance).
+* ``elastic`` — an :class:`~repro.core.elastic.ElasticSchedule` of unit
+  join/leave events applied mid-run under :class:`SimulatedClock`: a
+  departing unit's in-flight chunk is requeued and re-issued to a
+  survivor, a joining unit starts stealing immediately, and every event
+  lands in ``RunReport.events``.
 
 Every run returns a :class:`~repro.core.interrupts.RunReport` carrying
 makespan, per-unit utilization, load balance, and the exact coverage
-spans — the invariants the test suite checks.
+spans — the invariants the test suite checks.  See
+``docs/architecture.md`` for the full design and ``docs/runtime_api.md``
+for the reference.
 """
 
 from __future__ import annotations
@@ -46,6 +59,7 @@ import time
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
+from .elastic import ElasticEvent, ElasticSchedule
 from .interrupts import AsyncEngine, PollingEngine, RunReport
 from .scheduler import (
     Chunk,
@@ -55,6 +69,7 @@ from .scheduler import (
     WorkerKind,
     WorkerState,
 )
+from .space import FlatSpace, IterationSpace, ShardedSpace, TiledSpace, as_space
 
 __all__ = [
     "HeteroRuntime",
@@ -146,46 +161,140 @@ class _TrackedScheduler:
     report builder need per-unit state, coverage history, and load-balance
     metrics; only :class:`MultiDynamicScheduler` keeps those natively.
     This facade adds uniform bookkeeping on top of every policy, so one
-    engine implementation drives them all.
+    engine implementation drives them all.  It also owns the two concerns
+    the inner policies stay ignorant of:
+
+    * ``offset`` — shard placement: the inner policy chunks a local
+      ``[0, shard_size)`` while issued chunks carry *global* indices.
+    * the requeue buffer — elastic leave support: a departed unit's
+      in-flight (and, for pre-split policies, never-issued) spans go
+      here and are served to any unit, before fresh inner chunks, so
+      coverage stays exact-once.
     """
 
-    def __init__(self, inner, unit_kinds: Mapping[str, str]) -> None:
+    def __init__(self, inner, unit_kinds: Mapping[str, str], *, offset: int = 0) -> None:
         self.inner = inner
+        self.offset = int(offset)
         self._lock = threading.Lock()
         self._states: Dict[str, WorkerState] = {
             n: WorkerState(name=n, kind=k) for n, k in unit_kinds.items()
         }
-        self._outstanding: Dict[str, Chunk] = {}
+        # which units the inner policy knows; joined units under a
+        # pre-split policy serve only from the requeue buffer
+        self._inner_known = set(unit_kinds)
+        self._removed: set = set()
+        # outstanding: worker -> (global chunk, came_from_requeue)
+        self._outstanding: Dict[str, Tuple[Chunk, bool]] = {}
+        self._requeued: List[Chunk] = []
         self._history: List[Tuple[Chunk, float]] = []
 
     @property
     def workers(self) -> Dict[str, WorkerState]:
         return dict(self._states)
 
+    @property
+    def removed(self) -> set:
+        return set(self._removed)
+
+    def items_done(self) -> int:
+        with self._lock:
+            return sum(s.items_done for s in self._states.values())
+
+    def _shift(self, chunk: Chunk) -> Chunk:
+        if self.offset == 0:
+            return chunk
+        return Chunk(chunk.start + self.offset, chunk.stop + self.offset, chunk.worker)
+
     def next_chunk(self, worker: str, now: float = 0.0) -> Optional[Chunk]:
         with self._lock:
             state = self._states[worker]
+            if worker in self._removed:
+                return None
             if state.busy:
                 raise RuntimeError(f"unit {worker!r} requested a chunk while busy")
-            chunk = self.inner.next_chunk(worker, now=now)
-            if chunk is None or chunk.size <= 0:
+            if self._requeued:
+                span = self._requeued.pop(0)
+                chunk = Chunk(span.start, span.stop, worker)
+                from_requeue = True
+            elif worker in self._inner_known:
+                chunk = self.inner.next_chunk(worker, now=now)
+                if chunk is None or chunk.size <= 0:
+                    return None
+                chunk = self._shift(chunk)
+                from_requeue = False
+            else:
                 return None
             state.busy = True
-            self._outstanding[worker] = chunk
+            self._outstanding[worker] = (chunk, from_requeue)
             return chunk
 
     def complete(self, worker: str, elapsed: float) -> None:
         with self._lock:
             state = self._states[worker]
-            chunk = self._outstanding.pop(worker, None)
-            if chunk is None:
+            entry = self._outstanding.pop(worker, None)
+            if entry is None:
                 raise RuntimeError(f"completion from idle unit {worker!r}")
+            chunk, from_requeue = entry
             state.busy = False
             state.items_done += chunk.size
             state.chunks_done += 1
             state.total_busy_time += max(elapsed, 1e-12)
             self._history.append((chunk, elapsed))
-        self.inner.complete(worker, elapsed)
+        if not from_requeue:
+            self.inner.complete(worker, elapsed)
+
+    # -- elastic membership -------------------------------------------------
+    def add_unit(
+        self, name: str, kind: str, throughput: Optional[float] = None
+    ) -> None:
+        """Admit a unit mid-run (elastic join)."""
+        with self._lock:
+            if name in self._states:
+                raise ValueError(
+                    f"unit {name!r} already participated in this run; "
+                    "joining units need fresh names"
+                )
+            self._states[name] = WorkerState(name=name, kind=kind)
+            if hasattr(self.inner, "add_worker"):
+                self.inner.add_worker(name, kind, throughput=throughput)
+                self._inner_known.add(name)
+
+    def remove_unit(self, name: str) -> Optional[Chunk]:
+        """Retire a unit mid-run (elastic leave).
+
+        The unit's in-flight chunk — and, for pre-split policies, any
+        assignment it never collected — moves to the requeue buffer.
+        Returns the aborted in-flight chunk (global indices) or None.
+        """
+        with self._lock:
+            if name not in self._states or name in self._removed:
+                raise ValueError(f"cannot remove unknown/departed unit {name!r}")
+            self._removed.add(name)
+            state = self._states[name]
+            state.busy = False
+            entry = self._outstanding.pop(name, None)
+            inflight = None
+            if entry is not None:
+                inflight = entry[0]
+                self._requeued.append(inflight)
+            if name in self._inner_known:
+                self._inner_known.discard(name)
+                if hasattr(self.inner, "remove_worker"):
+                    # aborts the inner policy's outstanding chunk too
+                    self.inner.remove_worker(name)
+                else:
+                    # pre-split policies (static/oracle/fixed): drain the
+                    # departed unit's never-issued assignments
+                    while True:
+                        leftover = self.inner.next_chunk(name, now=0.0)
+                        if leftover is None or leftover.size <= 0:
+                            break
+                        self._requeued.append(self._shift(leftover))
+            return inflight
+
+    def has_requeued(self) -> bool:
+        with self._lock:
+            return bool(self._requeued)
 
     def coverage(self) -> List[Tuple[int, int]]:
         with self._lock:
@@ -303,6 +412,8 @@ class HeteroRuntime:
         policy: Union[str, Mapping[str, Tuple[int, int]]],
         acc_chunk: int,
         scheduler_kwargs: Optional[dict],
+        *,
+        offset: int = 0,
     ) -> _TrackedScheduler:
         kinds = {s.name: s.kind for s in specs}
         if isinstance(policy, Mapping):
@@ -320,7 +431,7 @@ class HeteroRuntime:
             )
         else:
             raise ValueError(f"unknown policy {policy!r} (want {POLICIES} or a mapping)")
-        return _TrackedScheduler(inner, kinds)
+        return _TrackedScheduler(inner, kinds, offset=offset)
 
     def plan(
         self,
@@ -347,16 +458,27 @@ class HeteroRuntime:
 
     def work_queue(
         self,
-        num_items: int,
+        num_items: int = 0,
         *,
+        space: Optional[Union[int, IterationSpace]] = None,
         units: Optional[Sequence[str]] = None,
         policy: Union[str, Mapping[str, Tuple[int, int]]] = "multidynamic",
         acc_chunk: int = 1,
         scheduler_kwargs: Optional[dict] = None,
     ) -> WorkQueue:
-        """Open an incremental completion-driven feed over ``[0, num_items)``."""
+        """Open an incremental completion-driven feed over an iteration space.
+
+        Accepts ``num_items`` (a flat range) or any non-sharded ``space``;
+        sharded spaces need per-shard engines and belong to
+        :meth:`parallel_for`.
+        """
+        sp = as_space(space, num_items)
+        if isinstance(sp, ShardedSpace):
+            raise ValueError("work_queue cannot iterate a ShardedSpace")
         specs = self._resolve_units(units)
-        sched = self._make_scheduler(num_items, specs, policy, acc_chunk, scheduler_kwargs)
+        sched = self._make_scheduler(
+            sp.num_items, specs, policy, acc_chunk, scheduler_kwargs
+        )
         return WorkQueue(sched, self.clock)
 
     # -- the paper's parallel_for ------------------------------------------
@@ -365,6 +487,7 @@ class HeteroRuntime:
         work_fn: Optional[WorkFn] = None,
         num_items: int = 0,
         *,
+        space: Optional[Union[int, IterationSpace]] = None,
         units: Optional[Sequence[str]] = None,
         policy: Union[str, Mapping[str, Tuple[int, int]]] = "multidynamic",
         engine: str = "interrupt",
@@ -372,14 +495,33 @@ class HeteroRuntime:
         item_cost: Optional[Sequence[float]] = None,
         poll_interval: float = 0.0,
         scheduler_kwargs: Optional[dict] = None,
+        elastic: Optional[Union[ElasticSchedule, Sequence[ElasticEvent]]] = None,
     ) -> RunReport:
-        """Execute ``[0, num_items)`` across the registered units.
+        """Execute an iteration space across the registered units.
+
+        The space is ``[0, num_items)`` by default, or any
+        :class:`~repro.core.space.IterationSpace` via ``space=``: a
+        :class:`~repro.core.space.TiledSpace` feeds the scheduler 2D
+        kernel tile indices, and a :class:`~repro.core.space.ShardedSpace`
+        runs one scheduler/engine per host shard over its slice and
+        merges per-shard reports into a global one (``shard_reports``,
+        coverage union, ``cross_shard_balance``).  Chunks always carry
+        *global* indices.
 
         ``work_fn`` applies to every unit; omit it to use each unit's
         registered ``work_fn``.  Under a :class:`SimulatedClock`, work
         functions are optional — chunk latency is ``sum(item_cost[chunk])
         / unit.speed`` in virtual time and any provided work functions are
-        still invoked (untimed) so callers can record side effects.
+        still invoked (untimed, at chunk completion, exactly once per
+        completed chunk) so callers can record side effects.
+
+        ``elastic`` (SimulatedClock only) is a timeline of unit
+        join/leave events with *run-relative* times: leaves requeue the
+        unit's in-flight chunk to the survivors, joins steal
+        immediately, and the processed events are recorded in
+        ``RunReport.events``.  Events timed after the space is fully
+        covered are dropped.  With a sharded space the timeline applies
+        to every shard's unit replica set independently.
         """
         if work_fn is not None and not callable(work_fn):
             raise TypeError(
@@ -388,12 +530,18 @@ class HeteroRuntime:
             )
         if engine not in ENGINES:
             raise ValueError(f"unknown engine {engine!r} (want one of {ENGINES})")
-        if num_items <= 0:
+        if space is None and num_items <= 0:
             raise ValueError(f"num_items must be positive, got {num_items}")
+        sp = as_space(space, num_items)
         specs = self._resolve_units(units)
-        sched = self._make_scheduler(num_items, specs, policy, acc_chunk, scheduler_kwargs)
 
         simulated = isinstance(self.clock, SimulatedClock)
+        elastic_events = self._normalize_elastic(elastic, specs)
+        if elastic_events and not simulated:
+            raise ValueError(
+                "elastic join/leave schedules require a SimulatedClock "
+                "(deterministic virtual-time replay)"
+            )
         fns: Dict[str, Optional[WorkFn]] = {
             s.name: (work_fn if work_fn is not None else s.work_fn) for s in specs
         }
@@ -403,14 +551,63 @@ class HeteroRuntime:
                 raise ValueError(
                     f"units {missing} have no work_fn (required on a wall clock)"
                 )
+            if item_cost is not None:
+                raise ValueError("item_cost is only meaningful under SimulatedClock")
+        if item_cost is not None and len(item_cost) != sp.num_items:
+            raise ValueError(
+                f"item_cost has {len(item_cost)} entries for {sp.num_items} items"
+            )
 
+        if isinstance(sp, ShardedSpace):
+            if isinstance(policy, Mapping):
+                raise ValueError(
+                    "a fixed {unit: (start, stop)} policy is ambiguous over a "
+                    "ShardedSpace; use multidynamic/static/oracle"
+                )
+            return self._run_sharded(
+                sp, specs, fns, work_fn, policy, engine, acc_chunk,
+                item_cost, poll_interval, scheduler_kwargs, elastic_events,
+            )
+
+        sched = self._make_scheduler(
+            sp.num_items, specs, policy, acc_chunk, scheduler_kwargs
+        )
         if simulated:
             return self._run_simulated(
-                sched, specs, fns, engine, num_items, item_cost, poll_interval
+                sched, specs, fns, engine, sp.num_items, item_cost,
+                poll_interval, clock=self.clock, elastic=elastic_events,
+                expected=sp.num_items, default_fn=work_fn,
             )
-        if item_cost is not None:
-            raise ValueError("item_cost is only meaningful under SimulatedClock")
         return self._run_wall(sched, fns, engine, poll_interval)
+
+    @staticmethod
+    def _normalize_elastic(
+        elastic: Optional[Union[ElasticSchedule, Sequence[ElasticEvent]]],
+        specs: List[UnitSpec],
+    ) -> List[ElasticEvent]:
+        if elastic is None:
+            return []
+        events = list(elastic.events if isinstance(elastic, ElasticSchedule) else elastic)
+        events.sort(key=lambda e: e.t)
+        known = {s.name for s in specs}
+        departed: set = set()
+        for ev in events:
+            if ev.action == "join":
+                if ev.unit in known or ev.unit in departed:
+                    raise ValueError(
+                        f"join event reuses unit name {ev.unit!r}; "
+                        "joining units need fresh names"
+                    )
+                known.add(ev.unit)
+            else:
+                if ev.unit not in known:
+                    raise ValueError(
+                        f"leave event for unknown or already-departed unit "
+                        f"{ev.unit!r}"
+                    )
+                known.discard(ev.unit)
+                departed.add(ev.unit)
+        return events
 
     # -- wall-clock execution ----------------------------------------------
     def _run_wall(
@@ -431,6 +628,79 @@ class HeteroRuntime:
         rep.coverage = sched.coverage()
         return rep
 
+    # -- sharded execution --------------------------------------------------
+    def _run_sharded(
+        self,
+        space: ShardedSpace,
+        specs: List[UnitSpec],
+        fns: Dict[str, Optional[WorkFn]],
+        work_fn: Optional[WorkFn],
+        policy: str,
+        engine: str,
+        acc_chunk: int,
+        item_cost: Optional[Sequence[float]],
+        poll_interval: float,
+        scheduler_kwargs: Optional[dict],
+        elastic_events: List[ElasticEvent],
+    ) -> RunReport:
+        """One scheduler + engine per shard; merge into a global report.
+
+        Shards model distinct hosts running concurrently, so the merged
+        makespan is the *max* of shard makespans: under
+        :class:`SimulatedClock` each shard replays on a private sub-clock
+        from the same origin and the runtime clock advances by the
+        slowest shard; on a wall clock interrupt/polling shards run on
+        concurrent host threads while ``inline`` stays a deterministic
+        sequential sweep.
+        """
+        simulated = isinstance(self.clock, SimulatedClock)
+        scheds: List[_TrackedScheduler] = []
+        for k in range(space.num_shards):
+            start, stop = space.shard_bounds(k)
+            scheds.append(
+                self._make_scheduler(
+                    stop - start, specs, policy, acc_chunk, scheduler_kwargs,
+                    offset=start,
+                )
+            )
+
+        reports: List[Optional[RunReport]] = [None] * space.num_shards
+        if simulated:
+            base = self.clock.now()
+            for k, sched in enumerate(scheds):
+                start, stop = space.shard_bounds(k)
+                sub = SimulatedClock(base)
+                reports[k] = self._run_simulated(
+                    sched, specs, dict(fns), engine, space.num_items,
+                    item_cost, poll_interval, clock=sub,
+                    elastic=list(elastic_events), expected=stop - start,
+                    default_fn=work_fn,
+                )
+            self.clock.advance(max(r.wall_time for r in reports))
+        elif engine == "inline":
+            for k, sched in enumerate(scheds):
+                reports[k] = self._run_wall(sched, fns, engine, poll_interval)
+        else:
+            errors: List[BaseException] = []
+
+            def drive(k: int, sched: _TrackedScheduler) -> None:
+                try:
+                    reports[k] = self._run_wall(sched, fns, engine, poll_interval)
+                except BaseException as exc:
+                    errors.append(exc)
+
+            threads = [
+                threading.Thread(target=drive, args=(k, s), name=f"eneac-shard{k}")
+                for k, s in enumerate(scheds)
+            ]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            if errors:
+                raise errors[0]
+        return _merge_shard_reports([r for r in reports if r is not None])
+
     # -- virtual-time execution --------------------------------------------
     def _run_simulated(
         self,
@@ -441,20 +711,31 @@ class HeteroRuntime:
         num_items: int,
         item_cost: Optional[Sequence[float]],
         poll_interval: float,
+        *,
+        clock: SimulatedClock,
+        elastic: Optional[List[ElasticEvent]] = None,
+        expected: Optional[int] = None,
+        default_fn: Optional[WorkFn] = None,
     ) -> RunReport:
-        clock: SimulatedClock = self.clock
-        # prefix sums so irregular per-item costs price a chunk in O(1)
+        t0 = clock.now()
+        # event times are run-relative; rebase onto this run's clock origin
+        # so a reused runtime (clock already advanced) behaves identically
+        elastic = [
+            ElasticEvent(t=t0 + ev.t, action=ev.action, unit=ev.unit,
+                         kind=ev.kind, speed=ev.speed)
+            for ev in (elastic or [])
+        ]
+        expected = num_items if expected is None else expected
+        # prefix sums so irregular per-item costs price a chunk in O(1);
+        # chunks carry global indices, so the prefix spans the full space
         if item_cost is not None:
-            if len(item_cost) != num_items:
-                raise ValueError(
-                    f"item_cost has {len(item_cost)} entries for {num_items} items"
-                )
             prefix = [0.0]
             for c in item_cost:
                 prefix.append(prefix[-1] + float(c))
         else:
             prefix = None
         speeds = {s.name: (1.0 if s.speed is None else s.speed) for s in specs}
+        report_events: List[dict] = []
 
         def cost(chunk: Chunk) -> float:
             work = (
@@ -464,48 +745,204 @@ class HeteroRuntime:
             )
             return work / max(speeds[chunk.worker], 1e-12)
 
-        t0 = clock.now()
+        def do_join(ev: ElasticEvent) -> None:
+            sched.add_unit(ev.unit, ev.kind, throughput=ev.speed)
+            speeds[ev.unit] = 1.0 if ev.speed is None else ev.speed
+            fns[ev.unit] = default_fn
+            report_events.append(
+                {"t": clock.now() - t0, "action": "join", "unit": ev.unit,
+                 "requeued": None}
+            )
+
+        def do_leave(ev: ElasticEvent) -> Optional[Chunk]:
+            inflight = sched.remove_unit(ev.unit)
+            report_events.append(
+                {"t": clock.now() - t0, "action": "leave", "unit": ev.unit,
+                 "requeued": (inflight.start, inflight.stop) if inflight else None}
+            )
+            return inflight
+
         if engine == "interrupt":
-            # event-driven: all units progress concurrently in virtual time
-            heap: List[Tuple[float, int, str, Chunk, float]] = []
-            seq = 0
-            for s in specs:
-                chunk = sched.next_chunk(s.name, now=clock.now())
-                if chunk is not None:
-                    if fns[s.name] is not None:
-                        fns[s.name](chunk)
-                    dt = cost(chunk)
-                    heapq.heappush(heap, (clock.now() + dt, seq, s.name, chunk, dt))
-                    seq += 1
-            while heap:
-                finish, _, name, chunk, dt = heapq.heappop(heap)
-                clock.advance(max(finish - clock.now(), 0.0))
-                sched.complete(name, dt)
-                nxt = sched.next_chunk(name, now=clock.now())
-                if nxt is not None:
-                    if fns[name] is not None:
-                        fns[name](nxt)
-                    dt = cost(nxt)
-                    heapq.heappush(heap, (clock.now() + dt, seq, name, nxt, dt))
-                    seq += 1
+            self._simulate_interrupt(
+                sched, specs, fns, clock, cost, elastic, do_join, do_leave,
+                expected,
+            )
         else:
-            # polling/inline: one virtual driver serializes every unit (the
-            # paper's no-interrupt host thread); "polling" additionally pays
-            # the busy-wait overhead per dispatch.
-            names = [s.name for s in specs]
-            active = True
-            while active:
-                active = False
-                for name in names:
-                    chunk = sched.next_chunk(name, now=clock.now())
-                    if chunk is None:
-                        continue
-                    active = True
-                    if fns[name] is not None:
-                        fns[name](chunk)
-                    dt = cost(chunk)
-                    clock.advance(dt)
-                    if engine == "polling" and poll_interval:
-                        clock.advance(poll_interval)
-                    sched.complete(name, dt)
-        return _build_report(sched, clock.now() - t0)
+            self._simulate_serial(
+                sched, specs, fns, clock, cost, elastic, do_join, do_leave,
+                engine, poll_interval, expected,
+            )
+        if elastic and sched.items_done() < expected:
+            raise RuntimeError(
+                f"elastic run stalled: {sched.items_done()}/{expected} items "
+                "completed but every remaining unit departed"
+            )
+        report = _build_report(sched, clock.now() - t0)
+        if report_events:
+            report.events = report_events
+        return report
+
+    def _simulate_interrupt(
+        self, sched, specs, fns, clock, cost, elastic, do_join, do_leave,
+        expected: int,
+    ) -> None:
+        """Event-driven replay: units progress concurrently in virtual time.
+
+        The heap carries both chunk completions and elastic membership
+        events; a leave cancels the departed unit's pending completion
+        (its chunk is requeued by the tracked scheduler) and wakes idle
+        survivors, a join dispatches the new unit immediately.  Work
+        functions run at chunk *completion*, so a chunk requeued by a
+        leave has its side effects recorded exactly once — by whichever
+        unit finally completes it.  Membership events timed after the
+        space is fully covered are dropped: they belong to no run, and
+        advancing the clock to them would corrupt the makespan.
+        """
+        heap: List[Tuple[float, int, int, object]] = []
+        seq = 0
+        inflight: Dict[str, int] = {}
+        cancelled: set = set()
+        _EVENT, _DONE = 0, 1
+
+        def dispatch(name: str) -> None:
+            nonlocal seq
+            chunk = sched.next_chunk(name, now=clock.now())
+            if chunk is None:
+                return
+            dt = cost(chunk)
+            heapq.heappush(heap, (clock.now() + dt, seq, _DONE, (name, chunk, dt)))
+            inflight[name] = seq
+            seq += 1
+
+        for ev in elastic:
+            # membership events sort before completions at the same instant
+            heapq.heappush(heap, (ev.t, seq, _EVENT, ev))
+            seq += 1
+        for s in specs:
+            dispatch(s.name)
+
+        while heap:
+            t, entry_seq, tag, payload = heapq.heappop(heap)
+            if tag == _DONE:
+                if entry_seq in cancelled:
+                    cancelled.discard(entry_seq)
+                    continue
+                name, chunk, dt = payload
+                clock.advance(max(t - clock.now(), 0.0))
+                inflight.pop(name, None)
+                sched.complete(name, dt)
+                if fns.get(name) is not None:
+                    fns[name](chunk)
+                dispatch(name)
+            else:
+                if sched.items_done() >= expected:
+                    continue  # run already over; stale membership event
+                clock.advance(max(t - clock.now(), 0.0))
+                if payload.action == "leave":
+                    do_leave(payload)
+                    pending = inflight.pop(payload.unit, None)
+                    if pending is not None:
+                        cancelled.add(pending)
+                    # idle survivors can pick up the requeued span now
+                    removed = sched.removed
+                    for n, st in sched.workers.items():
+                        if not st.busy and n not in removed:
+                            dispatch(n)
+                else:
+                    do_join(payload)
+                    dispatch(payload.unit)
+
+    def _simulate_serial(
+        self, sched, specs, fns, clock, cost, elastic, do_join, do_leave,
+        engine: str, poll_interval: float, expected: int,
+    ) -> None:
+        """Serial replay (polling/inline): one virtual driver thread.
+
+        Chunk execution is atomic on the driver, so membership changes
+        take effect at dispatch boundaries — a leave never strands an
+        in-flight chunk here; it requeues the unit's uncollected
+        pre-split assignment (if any) and removes it from the rotation.
+        """
+        pending = list(elastic)  # already time-sorted
+        names = [s.name for s in specs]
+
+        def process_due() -> None:
+            while pending and pending[0].t <= clock.now() + 1e-15:
+                ev = pending.pop(0)
+                if ev.action == "leave":
+                    do_leave(ev)
+                    if ev.unit in names:
+                        names.remove(ev.unit)
+                else:
+                    do_join(ev)
+                    names.append(ev.unit)
+
+        while True:
+            process_due()
+            issued_any = False
+            for name in list(names):
+                if name not in names:
+                    continue
+                chunk = sched.next_chunk(name, now=clock.now())
+                if chunk is None:
+                    continue
+                issued_any = True
+                if fns.get(name) is not None:
+                    fns[name](chunk)
+                dt = cost(chunk)
+                clock.advance(dt)
+                if engine == "polling" and poll_interval:
+                    clock.advance(poll_interval)
+                sched.complete(name, dt)
+                process_due()
+            if not issued_any:
+                if pending and sched.items_done() < expected:
+                    # idle until the next membership event (e.g. a join
+                    # that will pick up requeued work); events timed after
+                    # full coverage are dropped, not waited for
+                    clock.advance(max(pending[0].t - clock.now(), 0.0))
+                    process_due()
+                    continue
+                break
+
+
+def _merge_shard_reports(reports: List[RunReport]) -> RunReport:
+    """Fold per-shard reports into one global RunReport.
+
+    Shards are concurrent hosts: merged makespan is the slowest shard;
+    per-unit maps are namespaced ``s{shard}/{unit}``; coverage is the
+    sorted union of shard coverages (still an exact tiling of the global
+    space); ``load_balance`` spans every unit of every shard, while
+    :attr:`RunReport.cross_shard_balance` compares whole shards.
+    """
+    if not reports:
+        raise ValueError("no shard reports to merge")
+    per_items: Dict[str, int] = {}
+    per_chunks: Dict[str, int] = {}
+    per_busy: Dict[str, float] = {}
+    coverage: List[tuple] = []
+    events: List[dict] = []
+    for k, rep in enumerate(reports):
+        for n, v in rep.per_worker_items.items():
+            per_items[f"s{k}/{n}"] = v
+        for n, v in rep.per_worker_chunks.items():
+            per_chunks[f"s{k}/{n}"] = v
+        for n, v in rep.per_worker_busy.items():
+            per_busy[f"s{k}/{n}"] = v
+        coverage.extend(rep.coverage or [])
+        for ev in rep.events or []:
+            events.append({**ev, "unit": f"s{k}/{ev['unit']}", "shard": k})
+    busy = [b for n, b in per_busy.items() if per_chunks.get(n)]
+    mean = sum(busy) / len(busy) if busy else 0.0
+    return RunReport(
+        wall_time=max(r.wall_time for r in reports),
+        items=sum(r.items for r in reports),
+        chunks=sum(r.chunks for r in reports),
+        per_worker_items=per_items,
+        per_worker_chunks=per_chunks,
+        per_worker_busy=per_busy,
+        load_balance=(max(busy) / max(mean, 1e-12)) if busy else 1.0,
+        coverage=sorted(coverage),
+        events=events or None,
+        shard_reports=list(reports),
+    )

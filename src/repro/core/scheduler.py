@@ -133,6 +133,28 @@ class MultiDynamicScheduler:
                 raise ValueError(f"duplicate worker {name!r}")
             self._workers[name] = WorkerState(name=name, kind=kind, throughput=throughput)
 
+    def abort(self, worker: str) -> Optional[Chunk]:
+        """Drop ``worker``'s in-flight chunk without counting it.
+
+        The elastic layer calls this when a unit departs mid-chunk; the
+        caller (the tracked facade in :mod:`repro.core.runtime`) owns
+        requeueing the returned span so coverage stays exact-once.
+        """
+        with self._lock:
+            state = self._workers.get(worker)
+            chunk = self._outstanding.pop(worker, None)
+            self._issue_times.pop(worker, None)
+            if state is not None:
+                state.busy = False
+            return chunk
+
+    def remove_worker(self, name: str) -> Optional[Chunk]:
+        """Unregister a unit mid-run (elastic leave); returns its aborted chunk."""
+        chunk = self.abort(name)
+        with self._lock:
+            self._workers.pop(name, None)
+        return chunk
+
     @property
     def workers(self) -> Dict[str, WorkerState]:
         return dict(self._workers)

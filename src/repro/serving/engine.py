@@ -17,14 +17,18 @@ of the completion-driven mechanism):
 Request admission is a thin client of
 :class:`~repro.core.runtime.HeteroRuntime`: each decode slot registers as
 a compute unit and ``run()`` opens a :class:`~repro.core.runtime.WorkQueue`
-over the submitted requests (unit-size chunks), so which request a freed
-slot picks up — and all per-slot utilization/coverage accounting — comes
-from the same completion-driven scheduler that powers ``parallel_for``.
-The closing :class:`~repro.core.interrupts.RunReport` is exposed as
-``last_run_report``.
+over an :class:`~repro.core.space.IterationSpace` of the submitted
+requests — a :class:`~repro.core.space.FlatSpace` whose indices are queue
+positions, scheduled in unit-size chunks — so which request a freed slot
+picks up, and all per-slot utilization/coverage accounting, comes from
+the same completion-driven scheduler that powers ``parallel_for``.  The
+closing :class:`~repro.core.interrupts.RunReport` of the most recent
+batch is exposed as :attr:`ServingEngine.last_run_report` (per-slot
+coverage, utilization, load balance — what the serving bench prints).
 
 Slot state lives in the batched KV caches; a new request is prefilled
 with batch=1 and spliced into its slot (pytree scatter on the batch dim).
+See ``docs/architecture.md`` for how serving maps onto the runtime.
 """
 
 from __future__ import annotations
@@ -40,6 +44,7 @@ import numpy as np
 
 from ..core.runtime import HeteroRuntime, WorkQueue
 from ..core.scheduler import WorkerKind
+from ..core.space import FlatSpace
 from ..models import Model
 from .sampling import sample
 
@@ -187,7 +192,8 @@ class ServingEngine:
                 self._pending = list(self.queue)
                 self.queue.clear()
                 self._feed = self.runtime.work_queue(
-                    len(self._pending), policy="multidynamic", acc_chunk=1,
+                    space=FlatSpace(len(self._pending)),
+                    policy="multidynamic", acc_chunk=1,
                 )
             # admit work into free slots (completion-driven in continuous
             # mode; batch-granularity in static mode — the polling analogue)

@@ -1,0 +1,39 @@
+"""The documentation's python snippets must execute (CI `docs` job locally)."""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+DOC_FILES = ["docs/architecture.md", "docs/runtime_api.md", "README.md"]
+
+
+def test_doc_files_exist():
+    for f in DOC_FILES:
+        assert (ROOT / f).is_file(), f"{f} missing"
+
+
+def test_doc_snippets_execute():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src") + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "tools/check_docs.py", *DOC_FILES],
+        cwd=ROOT, env=env, capture_output=True, text=True, timeout=300,
+    )
+    assert proc.returncode == 0, f"doc snippets failed:\n{proc.stdout}\n{proc.stderr}"
+
+
+def test_extractor_separates_languages(tmp_path):
+    sys.path.insert(0, str(ROOT / "tools"))
+    try:
+        from check_docs import extract_blocks
+    finally:
+        sys.path.pop(0)
+    md = "\n".join([
+        "# t", "```python", "x = 1", "```", "", "```bash", "rm -rf /", "```",
+        "```", "plain", "```", "```python", "y = x + 1", "```",
+    ])
+    blocks = extract_blocks(md)
+    assert len(blocks) == 2
+    assert blocks[0][1] == "x = 1" and blocks[1][1] == "y = x + 1"

@@ -1,0 +1,327 @@
+"""Elastic unit join/leave mid-run: the exact-once requeue invariant.
+
+The contract under test (ISSUE 3 acceptance): every index of the
+iteration space is covered exactly once even when a unit leaves mid-run
+(its in-flight chunk requeued to survivors) and another joins (stealing
+immediately), across all three engines under SimulatedClock — and the
+elasticity events are recorded in the RunReport.
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # CI container has no hypothesis; use the vendored shim
+    from _propcheck import given, settings, strategies as st
+
+from repro.core import (
+    ElasticMeshManager,
+    ElasticSchedule,
+    ElasticEvent,
+    HeteroRuntime,
+    ShardedSpace,
+    SimulatedClock,
+    WorkerKind,
+)
+from repro.core.runtime import ENGINES, POLICIES
+
+
+def make_runtime(n_acc=2, n_cc=2, acc_speed=8e3, cc_speed=1e3):
+    rt = HeteroRuntime(clock=SimulatedClock())
+    for i in range(n_acc):
+        rt.register_unit(f"acc{i}", WorkerKind.ACC, speed=acc_speed)
+    for i in range(n_cc):
+        rt.register_unit(f"cc{i}", WorkerKind.CC, speed=cc_speed)
+    return rt
+
+
+def assert_exact_tiling(spans, n_items):
+    assert spans, "no chunks completed"
+    assert spans[0][0] == 0
+    assert spans[-1][1] == n_items
+    for (a, b), (c, d) in zip(spans, spans[1:]):
+        assert b == c, f"gap or overlap at {b}:{c}"
+
+
+def leave_then_join(t_leave=0.05, t_join=0.08):
+    return (ElasticSchedule()
+            .leave(t_leave, "cc0")
+            .join(t_join, "cc_new", kind="cc", speed=2e3))
+
+
+class TestRequeueInvariant:
+    """The ISSUE's satellite: exact-once across all three engines."""
+
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_leave_and_join_exact_once(self, engine):
+        rep = make_runtime().parallel_for(
+            num_items=2000, policy="multidynamic", engine=engine,
+            acc_chunk=64, elastic=leave_then_join(),
+        )
+        assert rep.items == 2000
+        assert_exact_tiling(rep.coverage, 2000)
+        # events recorded, in order, with the join attributed
+        assert [e["action"] for e in rep.events] == ["leave", "join"]
+        assert rep.per_worker_items["cc_new"] > 0
+        # the departed unit stops at the leave: it did less than its twin
+        assert rep.per_worker_items["cc0"] <= rep.per_worker_items["cc1"]
+
+    @pytest.mark.parametrize("engine", ENGINES)
+    @pytest.mark.parametrize("policy", POLICIES)
+    def test_leave_exact_once_every_policy(self, engine, policy):
+        # pre-split policies must requeue the departed unit's uncollected
+        # assignment, not just its in-flight chunk
+        rep = make_runtime().parallel_for(
+            num_items=1501, policy=policy, engine=engine, acc_chunk=64,
+            elastic=ElasticSchedule().leave(0.05, "cc0"),
+        )
+        assert rep.items == 1501
+        assert_exact_tiling(rep.coverage, 1501)
+
+    def test_interrupt_leave_requeues_inflight_chunk(self):
+        # slow unit, long chunk: the leave lands mid-chunk and the exact
+        # span goes back to the pool
+        rt = HeteroRuntime(clock=SimulatedClock())
+        rt.register_unit("fast", WorkerKind.ACC, speed=1e3)
+        rt.register_unit("slow", WorkerKind.CC, speed=10.0)
+        rep = rt.parallel_for(
+            num_items=500, policy="multidynamic", engine="interrupt",
+            acc_chunk=50, elastic=ElasticSchedule().leave(0.1, "slow"),
+        )
+        assert rep.items == 500
+        assert_exact_tiling(rep.coverage, 500)
+        leave = rep.events[0]
+        assert leave["action"] == "leave" and leave["requeued"] is not None
+        a, b = leave["requeued"]
+        assert 0 <= a < b <= 500
+        # the requeued span was completed by the survivor
+        assert (a, b) in rep.coverage or any(
+            s <= a and b <= e for s, e in rep.coverage)
+
+    def test_join_steals_immediately(self):
+        base = make_runtime(n_acc=1, n_cc=1, acc_speed=1e3, cc_speed=1e3)
+        rep0 = base.parallel_for(
+            num_items=4000, policy="multidynamic", engine="interrupt",
+            acc_chunk=64,
+        )
+        joined = make_runtime(n_acc=1, n_cc=1, acc_speed=1e3, cc_speed=1e3)
+        rep1 = joined.parallel_for(
+            num_items=4000, policy="multidynamic", engine="interrupt",
+            acc_chunk=64,
+            elastic=ElasticSchedule().join(0.0, "acc9", kind="acc", speed=1e3),
+        )
+        assert rep1.per_worker_items["acc9"] > 0
+        assert rep1.makespan < rep0.makespan
+
+    def test_all_units_leave_without_replacement_raises(self):
+        rt = HeteroRuntime(clock=SimulatedClock())
+        rt.register_unit("a", WorkerKind.ACC, speed=10.0)
+        with pytest.raises(RuntimeError, match="stalled"):
+            rt.parallel_for(
+                num_items=100, policy="multidynamic", engine="interrupt",
+                acc_chunk=8, elastic=ElasticSchedule().leave(1.0, "a"),
+            )
+
+    def test_rescue_join_after_total_departure(self):
+        rt = HeteroRuntime(clock=SimulatedClock())
+        rt.register_unit("a", WorkerKind.ACC, speed=10.0)
+        rep = rt.parallel_for(
+            num_items=100, policy="multidynamic", engine="interrupt",
+            acc_chunk=8,
+            elastic=(ElasticSchedule()
+                     .leave(1.0, "a")
+                     .join(3.0, "b", kind="acc", speed=10.0)),
+        )
+        assert rep.items == 100
+        assert_exact_tiling(rep.coverage, 100)
+
+    def test_event_times_are_run_relative(self):
+        # a reused runtime whose clock already advanced must replay the
+        # same schedule identically (events fire mid-run, not at t=0)
+        rt = make_runtime()
+        first = rt.parallel_for(
+            num_items=2000, policy="multidynamic", engine="interrupt",
+            acc_chunk=64, elastic=leave_then_join(),
+        )
+        assert rt.clock.now() > 0.05
+        second = rt.parallel_for(
+            num_items=2000, policy="multidynamic", engine="interrupt",
+            acc_chunk=64, elastic=leave_then_join(),
+        )
+        assert second.per_worker_items == first.per_worker_items
+        # recorded times are run-relative (up to float rebasing noise)
+        for e1, e2 in zip(first.events, second.events):
+            assert (e1["action"], e1["unit"], e1["requeued"]) == (
+                e2["action"], e2["unit"], e2["requeued"])
+            assert e2["t"] == pytest.approx(e1["t"], abs=1e-9)
+        assert second.per_worker_items["cc0"] > 0  # worked until the leave
+
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_late_events_do_not_stretch_makespan(self, engine):
+        # an event timed after full coverage is dropped, not waited for
+        def run(elastic=None):
+            rt = HeteroRuntime(clock=SimulatedClock())
+            rt.register_unit("a", WorkerKind.ACC, speed=1e3)
+            return rt.parallel_for(
+                num_items=100, policy="multidynamic", engine=engine,
+                acc_chunk=16, elastic=elastic,
+            )
+        base = run()
+        late = run(ElasticSchedule().join(50.0, "late", kind="acc", speed=1e3))
+        assert late.makespan == base.makespan
+        assert not late.events  # never part of the run
+        assert late.per_worker_items.get("late", 0) == 0
+
+    def test_requeued_chunk_side_effects_exactly_once(self):
+        # the work_fn runs at completion: a chunk aborted by a leave is
+        # recorded only by the survivor that finally completes it
+        from collections import Counter
+
+        counts = Counter()
+
+        def record(chunk):
+            counts.update(chunk.indices())
+
+        rt = HeteroRuntime(clock=SimulatedClock())
+        rt.register_unit("fast", WorkerKind.ACC, speed=1e3)
+        rt.register_unit("slow", WorkerKind.CC, speed=10.0)
+        rep = rt.parallel_for(
+            record, num_items=500, policy="multidynamic", engine="interrupt",
+            acc_chunk=50, elastic=ElasticSchedule().leave(0.1, "slow"),
+        )
+        assert rep.events[0]["requeued"] is not None  # leave was mid-chunk
+        assert set(counts) == set(range(500))
+        assert set(counts.values()) == {1}, "some index recorded twice"
+
+    def test_elastic_runs_are_deterministic(self):
+        def run():
+            return make_runtime().parallel_for(
+                num_items=3000, policy="multidynamic", engine="interrupt",
+                acc_chunk=64, elastic=leave_then_join(),
+            )
+        r1, r2 = run(), run()
+        assert r1.makespan == r2.makespan
+        assert r1.coverage == r2.coverage
+        assert r1.events == r2.events
+
+    @given(
+        n_items=st.integers(64, 4000),
+        acc_chunk=st.integers(1, 256),
+        t_leave=st.floats(0.0, 0.5),
+        dt_join=st.floats(0.0, 0.5),
+        pick=st.integers(0, 8),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_exact_once_property(self, n_items, acc_chunk, t_leave, dt_join, pick):
+        rep = make_runtime().parallel_for(
+            num_items=n_items, policy=POLICIES[pick % 3],
+            engine=ENGINES[pick // 3], acc_chunk=acc_chunk,
+            elastic=(ElasticSchedule()
+                     .leave(t_leave, "cc0")
+                     .join(t_leave + dt_join, "cc_new", kind="cc", speed=2e3)),
+        )
+        assert rep.items == n_items
+        assert_exact_tiling(rep.coverage, n_items)
+
+
+class TestElasticValidation:
+    def test_rejected_on_wall_clock(self):
+        rt = HeteroRuntime()
+        rt.register_unit("a", WorkerKind.ACC, work_fn=lambda c: None)
+        with pytest.raises(ValueError, match="SimulatedClock"):
+            rt.parallel_for(num_items=10,
+                            elastic=ElasticSchedule().leave(1.0, "a"))
+
+    def test_leave_of_unknown_unit_rejected(self):
+        rt = make_runtime()
+        with pytest.raises(ValueError, match="unknown"):
+            rt.parallel_for(num_items=10,
+                            elastic=ElasticSchedule().leave(1.0, "ghost"))
+
+    def test_join_reusing_live_name_rejected(self):
+        rt = make_runtime()
+        with pytest.raises(ValueError, match="reuses"):
+            rt.parallel_for(num_items=10,
+                            elastic=ElasticSchedule().join(1.0, "cc0"))
+
+    def test_double_leave_rejected_up_front(self):
+        rt = make_runtime()
+        with pytest.raises(ValueError, match="already-departed"):
+            rt.parallel_for(
+                num_items=10,
+                elastic=ElasticSchedule().leave(0.05, "cc0").leave(0.1, "cc0"),
+            )
+
+    def test_join_reusing_departed_name_rejected(self):
+        rt = make_runtime()
+        with pytest.raises(ValueError, match="reuses"):
+            rt.parallel_for(
+                num_items=10,
+                elastic=ElasticSchedule().leave(0.05, "cc0").join(0.1, "cc0"),
+            )
+
+    def test_bad_event_fields_rejected(self):
+        with pytest.raises(ValueError):
+            ElasticEvent(t=1.0, action="explode", unit="a")
+        with pytest.raises(ValueError):
+            ElasticEvent(t=-1.0, action="leave", unit="a")
+
+    def test_events_accepted_as_plain_sequence(self):
+        rep = make_runtime().parallel_for(
+            num_items=500, policy="multidynamic", engine="inline",
+            acc_chunk=32,
+            elastic=[ElasticEvent(t=0.05, action="leave", unit="cc0")],
+        )
+        assert rep.items == 500
+        assert_exact_tiling(rep.coverage, 500)
+
+
+class TestElasticSharded:
+    def test_schedule_applies_per_shard(self):
+        rep = make_runtime().parallel_for(
+            space=ShardedSpace(4000, 2), policy="multidynamic",
+            engine="interrupt", acc_chunk=64, elastic=leave_then_join(),
+        )
+        assert rep.items == 4000
+        assert_exact_tiling(rep.coverage, 4000)
+        # each shard's unit replica set saw the same leave+join
+        assert len(rep.events) == 4
+        assert {e["unit"] for e in rep.events} == {
+            "s0/cc0", "s0/cc_new", "s1/cc0", "s1/cc_new"}
+
+
+class TestMeshHook:
+    def test_mesh_failures_become_unit_leaves(self):
+        mesh = ElasticMeshManager((2, 4), ("host", "model"), host_size=4)
+        schedule = ElasticSchedule.from_mesh(
+            mesh,
+            bindings={"acc0": 0, "cc0": 1, "cc1": 1},
+            faults=[(0.5, 5)],          # device 5 -> host 1 dies
+        )
+        assert [(e.action, e.unit) for e in schedule.events] == [
+            ("leave", "cc0"), ("leave", "cc1")]
+        assert mesh.lost_ids == [4, 5, 6, 7]
+
+    def test_mesh_driven_run_keeps_exact_once(self):
+        mesh = ElasticMeshManager((2, 4), ("host", "model"), host_size=4)
+        schedule = ElasticSchedule.from_mesh(
+            mesh,
+            bindings={"cc0": 1, "cc1": 1},
+            faults=[(0.05, 4)],
+            joins=[ElasticEvent(t=0.1, action="join", unit="cc9",
+                                kind="cc", speed=2e3)],
+        )
+        rep = make_runtime().parallel_for(
+            num_items=2000, policy="multidynamic", engine="interrupt",
+            acc_chunk=64, elastic=schedule,
+        )
+        assert rep.items == 2000
+        assert_exact_tiling(rep.coverage, 2000)
+        assert rep.per_worker_items["cc9"] > 0
+
+    def test_repeat_fault_same_host_no_duplicate_leaves(self):
+        mesh = ElasticMeshManager((2, 4), ("host", "model"), host_size=4)
+        schedule = ElasticSchedule.from_mesh(
+            mesh, bindings={"cc0": 1}, faults=[(0.5, 5), (0.6, 6)],
+        )
+        assert len(schedule.events) == 1

@@ -1,0 +1,275 @@
+"""Iteration spaces: flat / tiled / sharded, and the sharded merge step.
+
+Everything runs under SimulatedClock except the explicit wall-clock
+sharding smoke test, so runs are deterministic and fast.
+"""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # CI container has no hypothesis; use the vendored shim
+    from _propcheck import given, settings, strategies as st
+
+from repro.core import (
+    FlatSpace,
+    HeteroRuntime,
+    ShardedSpace,
+    SimulatedClock,
+    TiledSpace,
+    WorkerKind,
+)
+from repro.core.runtime import ENGINES, POLICIES
+from repro.core.space import as_space
+
+
+def make_runtime(n_acc=2, n_cc=2, acc_speed=8e3, cc_speed=1e3, clock=None):
+    rt = HeteroRuntime(clock=clock if clock is not None else SimulatedClock())
+    for i in range(n_acc):
+        rt.register_unit(f"acc{i}", WorkerKind.ACC, speed=acc_speed)
+    for i in range(n_cc):
+        rt.register_unit(f"cc{i}", WorkerKind.CC, speed=cc_speed)
+    return rt
+
+
+def assert_exact_tiling(spans, n_items):
+    assert spans, "no chunks completed"
+    assert spans[0][0] == 0
+    assert spans[-1][1] == n_items
+    for (a, b), (c, d) in zip(spans, spans[1:]):
+        assert b == c, f"gap or overlap at {b}:{c}"
+
+
+class TestSpaceConstruction:
+    def test_flat_space(self):
+        assert len(FlatSpace(10)) == 10
+        with pytest.raises(ValueError):
+            FlatSpace(0)
+
+    def test_as_space_normalization(self):
+        assert isinstance(as_space(None, 5), FlatSpace)
+        assert as_space(7, 0).num_items == 7
+        sp = TiledSpace((4, 4), (2, 2))
+        assert as_space(sp, 0) is sp
+        with pytest.raises(ValueError):
+            as_space(sp, 99)  # contradictory num_items
+        with pytest.raises(TypeError):
+            as_space("nope", 0)
+
+    def test_tiled_edge_clipping(self):
+        sp = TiledSpace((100, 90), (32, 32))
+        assert sp.tiles == (4, 3)
+        assert sp.num_items == 12
+        # last tile is clipped to the grid on both axes
+        rs, cs = sp.tile_slices(sp.num_items - 1)
+        assert (rs.start, rs.stop) == (96, 100)
+        assert (cs.start, cs.stop) == (64, 90)
+        with pytest.raises(IndexError):
+            sp.tile_slices(12)
+
+    def test_tiled_row_major_order(self):
+        sp = TiledSpace((4, 6), (2, 2))  # 2x3 tiles
+        assert [sp.tile_index(i) for i in range(6)] == [
+            (0, 0), (0, 1), (0, 2), (1, 0), (1, 1), (1, 2)]
+
+    def test_tiled_slices_tile_the_grid(self):
+        sp = TiledSpace((10, 7), (3, 2))
+        mask = np.zeros((10, 7), int)
+        for i in range(sp.num_items):
+            rs, cs = sp.tile_slices(i)
+            mask[rs, cs] += 1
+        assert (mask == 1).all()
+
+    def test_sharded_bounds_partition_exactly(self):
+        sp = ShardedSpace(101, 4)
+        bounds = sp.bounds
+        assert bounds[0][0] == 0 and bounds[-1][1] == 101
+        for (a, b), (c, d) in zip(bounds, bounds[1:]):
+            assert b == c
+        assert all(b > a for a, b in bounds)
+        assert sp.shard_of(0) == 0 and sp.shard_of(100) == 3
+
+    def test_sharded_weights_skew_partition(self):
+        sp = ShardedSpace(100, 2, weights=[3.0, 1.0])
+        (a0, b0), (a1, b1) = sp.bounds
+        assert b0 - a0 == 75 and b1 - a1 == 25
+
+    def test_sharded_validation(self):
+        with pytest.raises(ValueError):
+            ShardedSpace(3, 5)          # more shards than items
+        with pytest.raises(ValueError):
+            ShardedSpace(10, 2, weights=[1.0])
+        with pytest.raises(ValueError):
+            ShardedSpace(10, 2, weights=[1.0, -1.0])
+        with pytest.raises(TypeError):
+            ShardedSpace(ShardedSpace(10, 2), 2)
+
+    def test_sharded_wraps_tiled(self):
+        sp = ShardedSpace(TiledSpace((8, 8), (2, 2)), 2)
+        assert sp.num_items == 16
+        assert sp.bounds == [(0, 8), (8, 16)]
+
+
+class TestShardedExecution:
+    @pytest.mark.parametrize("policy", POLICIES)
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_exact_once_all_policies_and_engines(self, policy, engine):
+        rep = make_runtime().parallel_for(
+            space=ShardedSpace(997, 3), policy=policy, engine=engine,
+            acc_chunk=64,
+        )
+        assert rep.items == 997
+        assert rep.num_shards == 3
+        assert_exact_tiling(rep.coverage, 997)
+
+    def test_merged_report_structure(self):
+        space = ShardedSpace(4096, 4)
+        rep = make_runtime().parallel_for(
+            space=space, policy="multidynamic", engine="interrupt",
+            acc_chunk=128,
+        )
+        assert len(rep.shard_reports) == 4
+        # per-shard items add up, and per-shard coverage tiles its slice
+        for k, sub in enumerate(rep.shard_reports):
+            start, stop = space.shard_bounds(k)
+            assert sub.items == stop - start
+            assert sub.coverage[0][0] == start
+            assert sub.coverage[-1][1] == stop
+        # merged per-unit maps are shard-namespaced
+        assert set(rep.per_worker_items) == {
+            f"s{k}/{u}" for k in range(4)
+            for u in ("acc0", "acc1", "cc0", "cc1")
+        }
+        assert sum(rep.per_worker_items.values()) == 4096
+        assert rep.cross_shard_balance >= 1.0
+        # shards run concurrently: global makespan is the slowest shard
+        assert rep.wall_time == max(s.wall_time for s in rep.shard_reports)
+
+    def test_sharded_makespan_beats_single_host(self):
+        """4 hosts over the same space finish ~4x faster than one."""
+        costs = np.random.default_rng(0).zipf(1.5, 8192).clip(max=50).astype(float)
+        one = make_runtime().parallel_for(
+            num_items=8192, policy="multidynamic", engine="interrupt",
+            acc_chunk=128, item_cost=costs,
+        )
+        four = make_runtime().parallel_for(
+            space=ShardedSpace(8192, 4), policy="multidynamic",
+            engine="interrupt", acc_chunk=128, item_cost=costs,
+        )
+        assert four.makespan < one.makespan / 2.5
+
+    def test_weighted_shards_balance_known_skew(self):
+        """Weighting shards by host capacity narrows cross-shard imbalance
+        for a regular workload on heterogeneous hosts... modelled here as
+        per-item costs that double in the second half of the space."""
+        costs = [1.0] * 500 + [2.0] * 500
+        even = make_runtime().parallel_for(
+            space=ShardedSpace(1000, 2), policy="multidynamic",
+            engine="interrupt", acc_chunk=32, item_cost=costs,
+        )
+        weighted = make_runtime().parallel_for(
+            space=ShardedSpace(1000, 2, weights=[2.0, 1.0]),
+            policy="multidynamic", engine="interrupt", acc_chunk=32,
+            item_cost=costs,
+        )
+        assert weighted.cross_shard_balance < even.cross_shard_balance
+
+    def test_fixed_mapping_policy_rejected(self):
+        rt = make_runtime()
+        with pytest.raises(ValueError):
+            rt.parallel_for(
+                space=ShardedSpace(100, 2),
+                policy={"acc0": (0, 100)}, engine="inline",
+            )
+
+    def test_sharded_deterministic(self):
+        def run():
+            return make_runtime().parallel_for(
+                space=ShardedSpace(2048, 3), policy="multidynamic",
+                engine="interrupt", acc_chunk=64,
+            )
+        r1, r2 = run(), run()
+        assert r1.makespan == r2.makespan
+        assert r1.coverage == r2.coverage
+        assert r1.per_worker_items == r2.per_worker_items
+
+    @given(
+        n_items=st.integers(4, 3000),
+        num_shards=st.integers(1, 4),
+        acc_chunk=st.integers(1, 300),
+        pick=st.integers(0, 8),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_sharded_tiling_property(self, n_items, num_shards, acc_chunk, pick):
+        rep = make_runtime().parallel_for(
+            space=ShardedSpace(n_items, num_shards),
+            policy=POLICIES[pick % 3], engine=ENGINES[pick // 3],
+            acc_chunk=acc_chunk,
+        )
+        assert rep.items == n_items
+        assert_exact_tiling(rep.coverage, n_items)
+
+    def test_wall_clock_sharded(self):
+        import time
+
+        rt = HeteroRuntime()
+        rt.register_unit("a", WorkerKind.ACC,
+                         work_fn=lambda c: time.sleep(c.size * 1e-5))
+        rt.register_unit("b", WorkerKind.CC,
+                         work_fn=lambda c: time.sleep(c.size * 2e-5))
+        rep = rt.parallel_for(
+            space=ShardedSpace(400, 2), policy="multidynamic",
+            engine="interrupt", acc_chunk=32,
+        )
+        assert rep.items == 400
+        assert_exact_tiling(rep.coverage, 400)
+        assert rep.num_shards == 2
+
+
+class TestTiledExecution:
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_every_tile_scheduled_once(self, engine):
+        space = TiledSpace((100, 90), (32, 32))
+        mask = np.zeros(space.grid, int)
+
+        def work(chunk):
+            for rs, cs in space.chunk_slices(chunk):
+                mask[rs, cs] += 1
+
+        rep = make_runtime().parallel_for(
+            work, space=space, policy="multidynamic", engine=engine,
+            acc_chunk=2,
+        )
+        assert rep.items == space.num_items
+        assert (mask == 1).all()
+
+    def test_tiled_inside_sharded(self):
+        space = TiledSpace((64, 64), (8, 8))  # 64 tiles
+        rep = make_runtime().parallel_for(
+            space=ShardedSpace(space, 2), policy="multidynamic",
+            engine="interrupt", acc_chunk=4,
+        )
+        assert rep.items == 64
+        assert_exact_tiling(rep.coverage, 64)
+
+    def test_work_queue_over_space(self):
+        rt = make_runtime(n_acc=2, n_cc=0)
+        feed = rt.work_queue(space=FlatSpace(5), acc_chunk=1)
+        seen = []
+        while True:
+            progressed = False
+            for name in feed.idle_units:
+                chunk = feed.acquire(name)
+                if chunk is not None:
+                    seen.append(chunk.start)
+                    feed.complete(name)
+                    progressed = True
+            if not progressed:
+                break
+        assert sorted(seen) == list(range(5))
+
+    def test_work_queue_rejects_sharded(self):
+        rt = make_runtime()
+        with pytest.raises(ValueError):
+            rt.work_queue(space=ShardedSpace(10, 2))

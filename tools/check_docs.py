@@ -1,0 +1,75 @@
+"""Extract and execute the ```python blocks in markdown docs.
+
+    PYTHONPATH=src python tools/check_docs.py docs/*.md README.md
+
+Within one file, blocks share a namespace and run top-to-bottom, so a
+later snippet can use names a earlier one defined — docs read as one
+continuous session.  A block fenced as anything other than ```python
+(```text, ```bash, bare ```) is skipped.  Any exception fails the run
+with the file, block number, and offending source, so documented
+examples cannot rot.  CI runs this as the `docs` job.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+import traceback
+from pathlib import Path
+
+FENCE = re.compile(r"^```(\w*)\s*$")
+
+
+def extract_blocks(text: str) -> list[tuple[int, str]]:
+    """Return (starting line number, source) for every ```python block."""
+    blocks = []
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        m = FENCE.match(lines[i])
+        if m:
+            lang, start = m.group(1), i + 1
+            body = []
+            i += 1
+            while i < len(lines) and not FENCE.match(lines[i]):
+                body.append(lines[i])
+                i += 1
+            if lang == "python":
+                blocks.append((start + 1, "\n".join(body)))
+        i += 1
+    return blocks
+
+
+def run_file(path: Path) -> int:
+    blocks = extract_blocks(path.read_text())
+    if not blocks:
+        print(f"  {path}: no python blocks")
+        return 0
+    namespace: dict = {"__name__": f"docsnippet:{path.name}"}
+    for n, (line, src) in enumerate(blocks, 1):
+        try:
+            code = compile(src, f"{path}:block{n}(line {line})", "exec")
+            exec(code, namespace)
+        except Exception:
+            print(f"FAIL {path} block {n} (line {line}):", file=sys.stderr)
+            print("-" * 60, file=sys.stderr)
+            print(src, file=sys.stderr)
+            print("-" * 60, file=sys.stderr)
+            traceback.print_exc()
+            return 1
+    print(f"  {path}: {len(blocks)} block(s) ok")
+    return 0
+
+
+def main(argv: list[str]) -> int:
+    paths = [Path(a) for a in argv] or sorted(Path("docs").glob("*.md"))
+    missing = [p for p in paths if not p.exists()]
+    if missing:
+        print(f"missing: {missing}", file=sys.stderr)
+        return 1
+    print(f"checking {len(paths)} file(s)")
+    return max((run_file(p) for p in paths), default=0)
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
