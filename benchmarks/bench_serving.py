@@ -14,7 +14,9 @@ from repro.models import make_model
 from repro.serving import Request, ServingEngine
 
 
-def serving_rows(*, quick: bool = False) -> List[Tuple[str, float, str]]:
+def serving_rows(
+    *, quick: bool = False, backend: str = "inline"
+) -> List[Tuple[str, float, str]]:
     cfg = get_config("tinyllama-1.1b").smoke()
     model = make_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -26,8 +28,10 @@ def serving_rows(*, quick: bool = False) -> List[Tuple[str, float, str]]:
         for _ in range(n_req)
     ]
     rows = []
+    suffix = f"_{backend}" if backend != "inline" else ""
     for mode in ("static", "continuous"):
-        eng = ServingEngine(model, params, slots=4, max_len=96, mode=mode)
+        eng = ServingEngine(model, params, slots=4, max_len=96, mode=mode,
+                            backend=backend)
         for i, (prompt, mx) in enumerate(protos):
             eng.submit(Request(rid=i, prompt=prompt, max_new_tokens=mx))
         t0 = time.perf_counter()
@@ -45,10 +49,37 @@ def serving_rows(*, quick: bool = False) -> List[Tuple[str, float, str]]:
                 f";slot_util_mean={sum(utils) / len(utils):.3f}"
                 f";slot_items={'/'.join(str(v) for v in run_rep.per_worker_items.values())}"
             )
+            if run_rep.dispatch_latency:
+                disp = run_rep.dispatch_latency.values()
+                slot_cols += (
+                    f";prefill_disp_us={sum(disp) / len(disp) * 1e6:.1f}"
+                )
         rows.append((
-            f"serving_{mode}",
+            f"serving_{mode}{suffix}",
             wall / max(rep["steps"], 1) * 1e6,
             f"us_per_step;tok_per_step={rep['tokens_per_step']:.3f};"
             f"steps={rep['steps']};tokens={rep['tokens']}" + slot_cols,
         ))
     return rows
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sizes (CI-scale)")
+    ap.add_argument("--backend", default="inline",
+                    choices=["inline", "threads"],
+                    help="prefill admission path: synchronous (inline) or "
+                         "per-slot ThreadUnits (async prefill overlapping "
+                         "the decode loop)")
+    args = ap.parse_args()
+    print("name,us_per_step,derived")
+    for name, us, derived in serving_rows(quick=args.quick,
+                                          backend=args.backend):
+        print(f"{name},{us:.3f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -131,6 +131,7 @@ def run_config(
     units: str, port: str, interrupts: bool,
     *, n_items: int, acc_chunk: int, t_cc: float, t_acc: float,
     hp_penalty: float, time_scale: float = 1.0, shards: int = 1,
+    backend: str = "threads",
 ) -> Tuple[float, RunReport]:
     """Returns (throughput in items/ms — paper units, the full RunReport).
 
@@ -138,6 +139,11 @@ def run_config(
     range: each shard gets its own replica of the unit set and its own
     scheduler/engine (concurrent host threads), modelling one SoC per
     shard over a slice of the global space.
+
+    ``backend`` selects where interrupt-engine chunks execute:
+    ``"threads"`` (dedicated worker thread per unit — real overlap, the
+    default) or ``"inline"`` (serial execution on the dispatcher — the
+    no-overlap control, isolating pure dispatch overhead).
     """
     rt = HeteroRuntime()
 
@@ -162,19 +168,27 @@ def run_config(
     rep = rt.parallel_for(
         num_items=0 if space is not None else n_items, space=space,
         policy="multidynamic", engine=engine, acc_chunk=acc_chunk,
+        backend=backend,
     )
     return rep.items / (rep.wall_time / time_scale) / 1e3, rep
 
 
-def report_columns(rep: RunReport) -> Tuple[float, float, float]:
-    """(load_balance, util_mean, util_min) — the columns the summary prints."""
+def report_columns(rep: RunReport) -> Tuple[float, float, float, float]:
+    """(load_balance, util_mean, util_min, disp_us) — the summary columns.
+
+    ``disp_us`` is the mean backend dispatch latency across units in
+    microseconds (0 when the run had no backend layer, e.g. polling).
+    """
     utils = list(rep.utilization.values())
-    return rep.load_balance, sum(utils) / len(utils), min(utils)
+    disp = list((rep.dispatch_latency or {}).values())
+    disp_us = (sum(disp) / len(disp) * 1e6) if disp else 0.0
+    return rep.load_balance, sum(utils) / len(utils), min(utils), disp_us
 
 
 def table1(
-    benchmark: str, *, quick: bool = False, shards: int = 1
-) -> List[Tuple[str, float, str, float, float, float]]:
+    benchmark: str, *, quick: bool = False, shards: int = 1,
+    backend: str = "threads",
+) -> List[Tuple[str, float, str, float, float, float, float]]:
     if benchmark == "hotspot":
         cal = calibrate_hotspot(256 if quick else 512)
         n_items, acc_chunk = cal["items"], (64 if quick else 128)
@@ -199,15 +213,16 @@ def table1(
             units, port or "hpc", interrupts,
             n_items=n_items, acc_chunk=acc_chunk,
             t_cc=t_cc, t_acc=t_acc, hp_penalty=hp_penalty,
-            time_scale=time_scale, shards=shards,
+            time_scale=time_scale, shards=shards, backend=backend,
         )
-        lb, u_mean, u_min = report_columns(rep)
+        lb, u_mean, u_min, disp_us = report_columns(rep)
         rows.append((f"table1_{benchmark}_{cid}_{label}{suffix}", thr,
-                     "items_per_ms", lb, u_mean, u_min))
+                     "items_per_ms", lb, u_mean, u_min, disp_us))
     return rows
 
 
-def chunk_sweep(benchmark: str = "hotspot", *, quick: bool = False):
+def chunk_sweep(benchmark: str = "hotspot", *, quick: bool = False,
+                backend: str = "threads"):
     """Fig-4 reproduction: hybrid(+INT) throughput vs ACC chunk size —
     exhibits the paper's cliff when one chunk exceeds ~1/4 of the space."""
     cal = calibrate_hotspot(256 if quick else 512)
@@ -220,11 +235,11 @@ def chunk_sweep(benchmark: str = "hotspot", *, quick: bool = False):
         thr, rep = run_config(
             "hybrid", "hpc", True, n_items=n_items, acc_chunk=chunk,
             t_cc=cal["cc"], t_acc=cal["acc_hpc"], hp_penalty=hp_penalty,
-            time_scale=time_scale,
+            time_scale=time_scale, backend=backend,
         )
-        lb, u_mean, u_min = report_columns(rep)
+        lb, u_mean, u_min, disp_us = report_columns(rep)
         rows.append((f"chunksweep_{benchmark}_c{chunk}", thr, "items_per_ms",
-                     lb, u_mean, u_min))
+                     lb, u_mean, u_min, disp_us))
     return rows
 
 
@@ -238,13 +253,20 @@ def main() -> None:
     ap.add_argument("--shards", type=int, default=1,
                     help="host shards: each runs its own scheduler/engine "
                          "over a slice of the space (ShardedSpace)")
+    ap.add_argument("--backend", default="threads",
+                    choices=["threads", "inline"],
+                    help="backend units for interrupt-engine configs: "
+                         "dedicated worker threads (real overlap) or "
+                         "inline serial execution (dispatch-overhead "
+                         "control)")
     args = ap.parse_args()
-    print("name,throughput,unit,load_balance,util_mean,util_min")
+    print("name,throughput,unit,load_balance,util_mean,util_min,disp_us")
     for bench in args.benchmarks:
-        for name, thr, unit, lb, u_mean, u_min in table1(
-            bench, quick=args.quick, shards=args.shards
+        for name, thr, unit, lb, u_mean, u_min, disp_us in table1(
+            bench, quick=args.quick, shards=args.shards, backend=args.backend
         ):
-            print(f"{name},{thr:.3f},{unit},{lb:.3f},{u_mean:.3f},{u_min:.3f}")
+            print(f"{name},{thr:.3f},{unit},{lb:.3f},{u_mean:.3f},"
+                  f"{u_min:.3f},{disp_us:.1f}")
 
 
 if __name__ == "__main__":

@@ -3,6 +3,8 @@
 * :mod:`repro.core.scheduler` — MultiDynamic heterogeneous chunk scheduler.
 * :mod:`repro.core.interrupts` — completion-driven async engine (interrupt
   analogue) + busy-wait baseline.
+* :mod:`repro.core.backends` — real backend units (threads, process
+  pools, jax device streams) + the event-driven wall-clock engine.
 * :mod:`repro.core.hetero` — throughput-proportional work partitioning.
 * :mod:`repro.core.straggler` — straggler detection and mitigation.
 * :mod:`repro.core.elastic` — node-failure handling / mesh rescale plans.
@@ -20,6 +22,15 @@
 
 from .scheduler import Chunk, MultiDynamicScheduler, OracleStaticScheduler, StaticScheduler, WorkerKind
 from .interrupts import AsyncEngine, CompletionEvent, PollingEngine, RunReport
+from .backends import (
+    BackendEngine,
+    BackendUnit,
+    CompletionBus,
+    InlineUnit,
+    JaxDeviceUnit,
+    ProcessPoolUnit,
+    ThreadUnit,
+)
 from .space import FlatSpace, IterationSpace, ShardedSpace, TiledSpace
 from .runtime import HeteroRuntime, SimulatedClock, UnitSpec, WallClock, WorkQueue
 from .hetero import HeteroPartition, HeterogeneousPartitioner, ThroughputTracker
@@ -48,6 +59,13 @@ __all__ = [
     "PollingEngine",
     "CompletionEvent",
     "RunReport",
+    "BackendEngine",
+    "BackendUnit",
+    "CompletionBus",
+    "InlineUnit",
+    "ThreadUnit",
+    "ProcessPoolUnit",
+    "JaxDeviceUnit",
     "HeteroPartition",
     "HeterogeneousPartitioner",
     "ThroughputTracker",

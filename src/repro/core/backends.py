@@ -1,0 +1,621 @@
+"""Backend units: genuine asynchronous dispatch for wall-clock runs.
+
+Before this module, a :class:`~repro.core.runtime.WallClock` run executed
+every ``work_fn`` *inside* the engine's own threads — asynchrony was an
+artifact of how :class:`~repro.core.interrupts.AsyncEngine` was written,
+not a property of the compute units.  The paper's model (and HEROv2's
+runtime) is the opposite: each heterogeneous processing unit is a real
+execution resource with its own stream, the host *submits* work to it and
+is told — asynchronously — when the unit finishes.  This module reifies
+that boundary:
+
+* :class:`BackendUnit` — the protocol: ``start(bus)`` /
+  ``submit(chunk, work_fn)`` (non-blocking, future-style: completion is
+  delivered to the run's :class:`CompletionBus`) / ``close()``.
+* :class:`InlineUnit` — synchronous execution on the dispatcher thread
+  (the degenerate backend: useful as a baseline for dispatch overhead and
+  for deterministic engine tests).
+* :class:`ThreadUnit` — one dedicated worker thread per unit, modelling a
+  CPU core (the paper's CC).  The default wall-clock backend.
+* :class:`ProcessPoolUnit` — a single-worker process pool, modelling a
+  separate CPU (no GIL sharing).  Work functions must be picklable.
+* :class:`JaxDeviceUnit` — dispatches the work function onto a jax
+  device's stream: jitted calls return immediately (XLA async dispatch)
+  and a waiter thread turns ``block_until_ready`` into the completion
+  signal.  Degrades to :class:`ThreadUnit` semantics when jax is absent.
+* :class:`BackendEngine` — the event-driven dispatcher the runtime's
+  ``_run_wall`` builds on: one loop thread hands each idle backend a
+  chunk the moment it goes idle, completions arrive on a condition
+  variable from the backends' real threads, and
+  :class:`~repro.core.elastic.ElasticSchedule` join/leave events are
+  applied mid-run under the tracked scheduler's lock so the exact-once
+  coverage invariant holds under real concurrency.
+
+Elastic semantics under a wall clock differ from the simulated abort
+model in one deliberate way: a **leave retires the unit** — it stops
+receiving chunks at the event time, but an in-flight chunk *completes
+and counts*, because real device work cannot be recalled mid-stream.
+(Under :class:`~repro.core.runtime.SimulatedClock` a leave models an
+instantaneous FPGA reprogram: the in-flight chunk is requeued.)  A
+departing unit's never-issued pre-split assignment is still drained
+into the requeue buffer and served to survivors, and a joining unit is
+given a fresh backend and starts stealing immediately — so work-function
+side effects happen exactly once per index even under churn, which is
+what `tests/test_backends.py` pins across randomized schedules.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple, Union
+
+from .elastic import ElasticEvent
+from .scheduler import Chunk
+
+__all__ = [
+    "BackendUnit",
+    "CompletionBus",
+    "CompletionRecord",
+    "InlineUnit",
+    "ThreadUnit",
+    "ProcessPoolUnit",
+    "JaxDeviceUnit",
+    "BackendEngine",
+    "BACKENDS",
+    "make_backend",
+]
+
+WorkFn = Callable[[Chunk], Any]
+
+BACKENDS = ("inline", "thread", "process", "jax")
+
+
+@dataclass
+class CompletionRecord:
+    """One finished (or failed) submission, posted to the run's bus."""
+
+    unit: str
+    chunk: Chunk
+    elapsed: float               # execution time (dispatch -> result ready)
+    dispatch_latency: float      # submit() -> execution actually starting
+    error: Optional[BaseException] = None
+    result: Any = None           # work_fn return value (serving uses this)
+
+
+class CompletionBus:
+    """The interrupt line of a run: backends post, the engine sleeps.
+
+    A condition variable + deque: ``post`` is called from backend worker
+    threads (or jax waiter threads), ``wait``/``drain`` from the single
+    dispatcher thread.  This is the wall-clock materialization of the
+    paper's per-accelerator interrupt — except one bus serves all units,
+    which is exactly what lets the dispatcher hand out the next chunk to
+    *whichever* unit finished first.
+    """
+
+    def __init__(self) -> None:
+        self._cond = threading.Condition()
+        self._ready: deque = deque()
+
+    def post(self, rec: CompletionRecord) -> None:
+        with self._cond:
+            self._ready.append(rec)
+            self._cond.notify_all()
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        """Sleep until at least one completion is pending (or timeout)."""
+        with self._cond:
+            return self._cond.wait_for(lambda: bool(self._ready), timeout=timeout)
+
+    def drain(self) -> List[CompletionRecord]:
+        with self._cond:
+            out = list(self._ready)
+            self._ready.clear()
+        return out
+
+
+class BackendUnit:
+    """Protocol + shared bookkeeping for one asynchronously-driven unit.
+
+    Lifecycle: ``start(bus)`` before the first submit (re-startable, so
+    one instance can serve consecutive runs), ``submit(chunk, work_fn)``
+    only while idle (the scheduler guarantees this), ``close()`` at run
+    end.  ``submit`` must not block on the work itself: completion is
+    reported by posting a :class:`CompletionRecord` to the bus.
+    """
+
+    kind_name = "backend"
+
+    def __init__(self, name: str) -> None:
+        self.name = name
+        self._bus: Optional[CompletionBus] = None
+        self.dispatch_latencies: List[float] = []
+
+    # -- lifecycle ----------------------------------------------------------
+    def start(self, bus: CompletionBus) -> None:
+        self._bus = bus
+        self.dispatch_latencies = []
+
+    def submit(self, chunk: Chunk, work_fn: WorkFn) -> None:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        self._bus = None
+
+    # -- shared helpers -----------------------------------------------------
+    def _post(self, rec: CompletionRecord) -> None:
+        assert self._bus is not None, f"unit {self.name!r} not started"
+        self.dispatch_latencies.append(rec.dispatch_latency)
+        self._bus.post(rec)
+
+    def _execute(self, chunk: Chunk, work_fn: WorkFn, submitted: float) -> None:
+        """Run one chunk synchronously and post the completion."""
+        t_start = time.perf_counter()
+        result, error = None, None
+        try:
+            result = work_fn(chunk)
+        except BaseException as exc:
+            error = exc
+        t_end = time.perf_counter()
+        self._post(CompletionRecord(
+            unit=self.name, chunk=chunk, elapsed=t_end - t_start,
+            dispatch_latency=t_start - submitted, error=error, result=result,
+        ))
+
+    def describe(self) -> str:
+        return f"{type(self).__name__}({self.name!r})"
+
+
+class InlineUnit(BackendUnit):
+    """Synchronous execution on the dispatcher thread.
+
+    The degenerate backend: no overlap, but identical submit/complete
+    bookkeeping — the control for dispatch-latency measurements and the
+    deterministic option for engine unit tests.
+    """
+
+    kind_name = "inline"
+
+    def submit(self, chunk: Chunk, work_fn: WorkFn) -> None:
+        self._execute(chunk, work_fn, time.perf_counter())
+
+
+class ThreadUnit(BackendUnit):
+    """A dedicated worker thread per unit — the default real backend.
+
+    ``submit`` enqueues and returns immediately; the worker executes and
+    posts the completion.  Dispatch latency is queue wait: submit time to
+    execution start.
+    """
+
+    kind_name = "thread"
+
+    def __init__(self, name: str) -> None:
+        super().__init__(name)
+        self._queue: Optional[queue.Queue] = None
+        self._thread: Optional[threading.Thread] = None
+
+    def start(self, bus: CompletionBus) -> None:
+        super().start(bus)
+        if self._thread is None or not self._thread.is_alive():
+            self._queue = queue.Queue()
+            self._thread = threading.Thread(
+                target=self._worker, name=f"eneac-unit-{self.name}", daemon=True
+            )
+            self._thread.start()
+
+    def _worker(self) -> None:
+        while True:
+            item = self._queue.get()
+            if item is None:
+                return
+            submitted, chunk, work_fn = item
+            self._execute(chunk, work_fn, submitted)
+
+    def submit(self, chunk: Chunk, work_fn: WorkFn) -> None:
+        assert self._queue is not None, f"unit {self.name!r} not started"
+        self._queue.put((time.perf_counter(), chunk, work_fn))
+
+    def close(self) -> None:
+        if self._thread is not None and self._thread.is_alive():
+            self._queue.put(None)
+            self._thread.join(timeout=10.0)
+        self._thread = None
+        self._queue = None
+        super().close()
+
+
+def _process_entry(work_fn: WorkFn, chunk: Chunk, submitted: float):
+    """Runs in the pool worker; perf_counter is CLOCK_MONOTONIC, which is
+    system-wide on Linux, so the dispatch latency spans the process hop."""
+    t_start = time.perf_counter()
+    result = work_fn(chunk)
+    t_end = time.perf_counter()
+    return result, t_end - t_start, t_start - submitted
+
+
+class ProcessPoolUnit(BackendUnit):
+    """A single-worker process pool — multi-process CPU dispatch.
+
+    Work functions (and their closures) must be picklable, and side
+    effects land in the *worker* process: callers get results back via
+    :attr:`CompletionRecord.result`, not shared memory.  If the host
+    cannot spawn processes (sandboxed CI), the unit degrades to in-thread
+    execution and sets :attr:`degraded`.
+    """
+
+    kind_name = "process"
+
+    def __init__(self, name: str) -> None:
+        super().__init__(name)
+        self._pool = None
+        self.degraded = False
+        self._fallback: Optional[ThreadUnit] = None
+
+    def start(self, bus: CompletionBus) -> None:
+        super().start(bus)
+        if self._pool is None and not self.degraded:
+            try:
+                import multiprocessing
+                from concurrent.futures import ProcessPoolExecutor
+
+                # spawn, not fork: the host process carries jax/XLA threads
+                # and forking a multithreaded process can deadlock
+                self._pool = ProcessPoolExecutor(
+                    max_workers=1,
+                    mp_context=multiprocessing.get_context("spawn"),
+                )
+                # force worker spawn now so a broken sandbox fails fast
+                self._pool.submit(int, 0).result(timeout=60)
+            except BaseException:
+                self._pool = None
+                self.degraded = True
+        if self.degraded:
+            if self._fallback is None:
+                self._fallback = ThreadUnit(self.name)
+            self._fallback.start(bus)
+            self._fallback.dispatch_latencies = self.dispatch_latencies
+
+    def submit(self, chunk: Chunk, work_fn: WorkFn) -> None:
+        if self.degraded:
+            assert self._fallback is not None
+            self._fallback.submit(chunk, work_fn)
+            return
+        submitted = time.perf_counter()
+        fut = self._pool.submit(_process_entry, work_fn, chunk, submitted)
+
+        def on_done(f, *, chunk=chunk) -> None:
+            error, result, elapsed, lat = None, None, 0.0, 0.0
+            try:
+                result, elapsed, lat = f.result()
+            except BaseException as exc:
+                error = exc
+                elapsed = time.perf_counter() - submitted
+            self._post(CompletionRecord(
+                unit=self.name, chunk=chunk, elapsed=elapsed,
+                dispatch_latency=lat, error=error, result=result,
+            ))
+
+        fut.add_done_callback(on_done)
+
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=False)
+            self._pool = None
+        if self._fallback is not None:
+            self._fallback.close()
+            self._fallback = None
+        super().close()
+
+
+def _jax_module():
+    """Import hook the tests monkeypatch to simulate a jax-less host."""
+    try:
+        import jax
+    except Exception:  # pragma: no cover - depends on environment
+        return None
+    return jax
+
+
+class JaxDeviceUnit(BackendUnit):
+    """Dispatch onto a jax device stream via non-blocking jit calls.
+
+    ``submit`` invokes the work function under ``jax.default_device``:
+    jitted computations are *enqueued* on the device and return
+    placeholder arrays immediately (XLA async dispatch), so the dispatch
+    call is cheap.  A waiter thread then calls ``block_until_ready`` on
+    the returned arrays — that is the completion interrupt.  Work
+    functions that return nothing are still correct (the waiter has
+    nothing to block on, so completion fires after dispatch), but then
+    the elapsed time only covers the host-side call.
+
+    When jax is unavailable the unit degrades to a :class:`ThreadUnit`
+    (synchronous execution on a dedicated thread) and sets
+    :attr:`degraded` — callers keep working, just without device overlap.
+    """
+
+    kind_name = "jax"
+
+    def __init__(self, name: str, device=None) -> None:
+        super().__init__(name)
+        self._requested_device = device
+        self._device = None
+        self.degraded = False
+        self._fallback: Optional[ThreadUnit] = None
+        self._waitq: Optional[queue.Queue] = None
+        self._waiter: Optional[threading.Thread] = None
+        self._jax = None
+
+    def start(self, bus: CompletionBus) -> None:
+        super().start(bus)
+        self._jax = _jax_module()
+        if self._jax is None:
+            self.degraded = True
+            if self._fallback is None:
+                self._fallback = ThreadUnit(self.name)
+            self._fallback.start(bus)
+            self._fallback.dispatch_latencies = self.dispatch_latencies
+            return
+        if self._device is None:
+            self._device = (
+                self._requested_device
+                if self._requested_device is not None
+                else self._jax.devices()[0]
+            )
+        if self._waiter is None or not self._waiter.is_alive():
+            self._waitq = queue.Queue()
+            self._waiter = threading.Thread(
+                target=self._wait_loop, name=f"eneac-jaxwait-{self.name}",
+                daemon=True,
+            )
+            self._waiter.start()
+
+    def _wait_loop(self) -> None:
+        while True:
+            item = self._waitq.get()
+            if item is None:
+                return
+            submitted, dispatched, chunk, out, error = item
+            if error is None:
+                try:
+                    self._jax.block_until_ready(out)
+                except BaseException as exc:
+                    error = exc
+            t_end = time.perf_counter()
+            self._post(CompletionRecord(
+                unit=self.name, chunk=chunk, elapsed=t_end - dispatched,
+                dispatch_latency=dispatched - submitted, error=error,
+                result=out,
+            ))
+
+    def submit(self, chunk: Chunk, work_fn: WorkFn) -> None:
+        if self.degraded:
+            assert self._fallback is not None
+            self._fallback.submit(chunk, work_fn)
+            return
+        submitted = time.perf_counter()
+        out, error = None, None
+        try:
+            with self._jax.default_device(self._device):
+                out = work_fn(chunk)  # jitted work: enqueued, not awaited
+        except BaseException as exc:
+            error = exc
+        self._waitq.put((submitted, time.perf_counter(), chunk, out, error))
+
+    def close(self) -> None:
+        if self._waiter is not None and self._waiter.is_alive():
+            self._waitq.put(None)
+            self._waiter.join(timeout=10.0)
+        self._waiter = None
+        self._waitq = None
+        if self._fallback is not None:
+            self._fallback.close()
+            self._fallback = None
+        super().close()
+
+
+def make_backend(spec: Union[str, BackendUnit, None], name: str) -> BackendUnit:
+    """Normalize a backend spec (string / instance / None) to a unit.
+
+    ``None`` means the runtime default — a :class:`ThreadUnit`, matching
+    the paper's one-host-thread-per-unit design.
+    """
+    if isinstance(spec, BackendUnit):
+        if spec.name != name:
+            raise ValueError(
+                f"backend unit is named {spec.name!r} but would back unit "
+                f"{name!r}; names must match — completions are routed by "
+                "unit name, and one backend instance can serve one unit only"
+            )
+        return spec
+    if spec is None:
+        return ThreadUnit(name)
+    aliases = {
+        "inline": InlineUnit,
+        "thread": ThreadUnit, "threads": ThreadUnit,
+        "process": ProcessPoolUnit, "processes": ProcessPoolUnit,
+        "jax": JaxDeviceUnit,
+    }
+    cls = aliases.get(str(spec))
+    if cls is None:
+        raise ValueError(f"unknown backend {spec!r} (want one of {BACKENDS} "
+                         "or a BackendUnit instance)")
+    return cls(name)
+
+
+# ---------------------------------------------------------------------------
+# the event-driven wall-clock engine
+# ---------------------------------------------------------------------------
+class BackendEngine:
+    """Completion-driven dispatcher over real backend units.
+
+    The paper's Fig. 2 loop with the asynchrony made real: the dispatcher
+    (caller thread) is the only client of the tracked scheduler — it
+    hands each idle backend a chunk, sleeps on the :class:`CompletionBus`
+    until any backend finishes (or the next elastic event is due), and
+    applies membership changes between dispatches.  Because scheduler
+    mutations are serialized on this thread *and* guarded by the tracked
+    scheduler's internal lock, the exact-once coverage invariant holds
+    even though executions genuinely overlap.
+
+    ``elastic`` events use run-relative wall seconds.  Leave = retire
+    (in-flight chunk completes and counts; pre-split leftovers are
+    requeued); join = a fresh backend from ``join_backend`` starts
+    stealing immediately.  Events due after full coverage are dropped.
+    """
+
+    def __init__(
+        self,
+        sched,
+        fns: Mapping[str, Optional[WorkFn]],
+        units: Dict[str, BackendUnit],
+        *,
+        expected: int,
+        elastic: Sequence[ElasticEvent] = (),
+        default_fn: Optional[WorkFn] = None,
+        join_backend: Optional[Callable[[ElasticEvent], BackendUnit]] = None,
+    ) -> None:
+        self.sched = sched
+        self.fns: Dict[str, Optional[WorkFn]] = dict(fns)
+        self.units = dict(units)
+        self.expected = expected
+        self.pending = sorted(elastic, key=lambda e: e.t)
+        self.default_fn = default_fn
+        self.join_backend = join_backend or (lambda ev: ThreadUnit(ev.unit))
+        self.bus = CompletionBus()
+        self.events: List[dict] = []          # RunReport.events entries
+        self._own_units = set()               # started here -> closed here
+        self._all_units = dict(units)         # includes retired units (stats)
+        self._busy: set = set()
+        self._leaving: set = set()
+        self._errors: List[BaseException] = []
+        self._t0 = 0.0
+
+    # -- helpers ------------------------------------------------------------
+    def _now(self) -> float:
+        return time.perf_counter() - self._t0
+
+    def _dispatch(self, name: str) -> bool:
+        if name in self._busy or name in self._leaving:
+            return False
+        if name in self.sched.removed:
+            return False
+        if self._errors:
+            return False
+        chunk = self.sched.next_chunk(name, now=time.perf_counter())
+        if chunk is None:
+            return False
+        self._busy.add(name)
+        self.units[name].submit(chunk, self.fns[name])
+        return True
+
+    def _dispatch_idle(self) -> bool:
+        any_issued = False
+        for name in list(self.units):
+            if self._dispatch(name):
+                any_issued = True
+        return any_issued
+
+    def _retire(self, name: str) -> None:
+        """Finalize a leave: remove from the scheduler (requeues pre-split
+        leftovers under its lock) and close the unit's backend."""
+        self.sched.remove_unit(name)
+        self._leaving.discard(name)
+        unit = self.units.pop(name, None)
+        if unit is not None and name in self._own_units:
+            unit.close()
+
+    def _apply_due_events(self) -> None:
+        while self.pending and self.pending[0].t <= self._now():
+            ev = self.pending.pop(0)
+            if self.sched.items_done() >= self.expected:
+                continue  # run already covered; stale membership event
+            if ev.action == "leave":
+                self.events.append({
+                    "t": self._now(), "action": "leave", "unit": ev.unit,
+                    "requeued": None,
+                })
+                if ev.unit in self._busy:
+                    # real work cannot be recalled: retire after completion
+                    self._leaving.add(ev.unit)
+                else:
+                    self._retire(ev.unit)
+            else:
+                unit = self.join_backend(ev)
+                unit.start(self.bus)
+                self.units[ev.unit] = unit
+                self._all_units[ev.unit] = unit
+                self._own_units.add(ev.unit)
+                self.fns[ev.unit] = self.default_fn
+                self.sched.add_unit(ev.unit, ev.kind, throughput=ev.speed)
+                self.events.append({
+                    "t": self._now(), "action": "join", "unit": ev.unit,
+                    "requeued": None,
+                })
+                self._dispatch(ev.unit)
+
+    def _process_completions(self, recs: List[CompletionRecord]) -> None:
+        for rec in recs:
+            self._busy.discard(rec.unit)
+            self.sched.complete(rec.unit, rec.elapsed)
+            if rec.error is not None:
+                self._errors.append(rec.error)
+            if rec.unit in self._leaving:
+                self._retire(rec.unit)
+
+    # -- the loop -----------------------------------------------------------
+    def run(self) -> float:
+        """Drive the space to completion; returns the wall makespan."""
+        self._t0 = time.perf_counter()
+        for name, unit in self.units.items():
+            unit.start(self.bus)
+            self._own_units.add(name)
+        try:
+            self._apply_due_events()
+            self._dispatch_idle()
+            while True:
+                if self._busy:
+                    timeout = None
+                    if self.pending:
+                        timeout = max(self.pending[0].t - self._now(), 0.0)
+                    self.bus.wait(timeout=timeout)
+                    self._apply_due_events()
+                    self._process_completions(self.bus.drain())
+                    self._dispatch_idle()
+                    continue
+                # nothing in flight: either more work is dispatchable, or
+                # we are waiting for a membership event, or we are done
+                self._apply_due_events()
+                if self._dispatch_idle():
+                    continue
+                if self._busy:
+                    continue
+                if (self.pending and not self._errors
+                        and self.sched.items_done() < self.expected):
+                    # idle until the next event (e.g. a rescuing join)
+                    time.sleep(max(self.pending[0].t - self._now(), 0.0))
+                    self._apply_due_events()
+                    continue
+                break
+        finally:
+            for name, unit in self.units.items():
+                if name in self._own_units:
+                    unit.close()
+        if self._errors:
+            raise self._errors[0]
+        return time.perf_counter() - self._t0
+
+    def dispatch_latency(self) -> Dict[str, float]:
+        """Mean submit->execution latency per unit, in seconds."""
+        out: Dict[str, float] = {}
+        for name, unit in self._all_units.items():
+            lats = unit.dispatch_latencies
+            if lats:
+                out[name] = sum(lats) / len(lats)
+        for name in self.sched.workers:
+            out.setdefault(name, 0.0)
+        return out

@@ -82,6 +82,11 @@ class RunReport:
     # Per-shard sub-reports when the run iterated a ShardedSpace; unit keys
     # in the merged per_worker_* maps are prefixed "s{shard}/".
     shard_reports: Optional[List["RunReport"]] = None
+    # Mean submit->execution-start latency per unit in seconds, measured by
+    # the backend layer (wall-clock interrupt runs only; None otherwise).
+    # Low values with overlapping busy times are what "real asynchrony"
+    # looks like: the dispatcher never sits between a free unit and work.
+    dispatch_latency: Optional[Dict[str, float]] = None
 
     @property
     def throughput(self) -> float:

@@ -23,10 +23,13 @@ Orthogonal knobs, matching the paper's ablation axes:
   adaptive scheme), ``"static"`` (even pre-split baseline), ``"oracle"``
   (throughput-proportional pre-split), or an explicit ``{unit: (start,
   stop)}`` mapping for externally-decided splits.
-* ``engine`` — how completions are observed: ``"interrupt"`` (per-unit
-  host threads sleeping on completion events — §3.2), ``"polling"``
-  (single busy-wait driver — the no-interrupt baseline), ``"inline"``
-  (deterministic single-threaded serial execution, for tests).
+* ``engine`` — how completions are observed: ``"interrupt"`` (the
+  event-driven :class:`~repro.core.backends.BackendEngine`: chunks
+  execute on real backend units — dedicated threads, process pools, jax
+  device streams — and completions arrive on a condition variable,
+  §3.2 made real), ``"polling"`` (single busy-wait driver — the
+  no-interrupt baseline), ``"inline"`` (deterministic single-threaded
+  serial execution, for tests).
 * ``clock`` — :class:`WallClock` for real execution, or
   :class:`SimulatedClock` for deterministic virtual-time runs: unit
   latencies come from registered ``speed`` priors and an optional
@@ -39,10 +42,15 @@ Orthogonal knobs, matching the paper's ablation axes:
   scheduler + engine per host shard and merges the per-shard reports
   into a global one (coverage union, cross-shard balance).
 * ``elastic`` — an :class:`~repro.core.elastic.ElasticSchedule` of unit
-  join/leave events applied mid-run under :class:`SimulatedClock`: a
+  join/leave events applied mid-run: under :class:`SimulatedClock` a
   departing unit's in-flight chunk is requeued and re-issued to a
-  survivor, a joining unit starts stealing immediately, and every event
+  survivor; under :class:`WallClock` (interrupt engine) the unit is
+  retired — its in-flight chunk completes, pre-split leftovers are
+  requeued.  A joining unit starts stealing immediately and every event
   lands in ``RunReport.events``.
+* ``backend`` — where wall-clock chunks execute: per-unit via
+  ``register_unit(backend=...)`` or per-call override; see
+  :mod:`repro.core.backends`.
 
 Every run returns a :class:`~repro.core.interrupts.RunReport` carrying
 makespan, per-unit utilization, load balance, and the exact coverage
@@ -59,8 +67,9 @@ import time
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
+from .backends import BackendEngine, BackendUnit, make_backend
 from .elastic import ElasticEvent, ElasticSchedule
-from .interrupts import AsyncEngine, PollingEngine, RunReport
+from .interrupts import PollingEngine, RunReport
 from .scheduler import (
     Chunk,
     MultiDynamicScheduler,
@@ -125,13 +134,18 @@ class UnitSpec:
     splits proportionally to it, the multidynamic scheduler seeds its
     throughput estimate with it, and :class:`SimulatedClock` runs use it as
     the unit's virtual execution rate.  ``work_fn`` is the unit's default
-    chunk executor (overridable per ``parallel_for`` call).
+    chunk executor (overridable per ``parallel_for`` call).  ``backend``
+    decides *where* wall-clock chunks execute — ``"inline"``, ``"thread"``
+    (default), ``"process"``, ``"jax"``, or a
+    :class:`~repro.core.backends.BackendUnit` instance — and is ignored
+    under :class:`SimulatedClock`, where execution is virtual.
     """
 
     name: str
     kind: str = WorkerKind.CC
     speed: Optional[float] = None
     work_fn: Optional[WorkFn] = None
+    backend: Optional[Union[str, BackendUnit]] = None
 
 
 # ---------------------------------------------------------------------------
@@ -347,7 +361,10 @@ class WorkQueue:
         return _build_report(self._sched, self._clock.now() - self._t0)
 
 
-def _build_report(sched: _TrackedScheduler, wall: float) -> RunReport:
+def _build_report(
+    sched: _TrackedScheduler, wall: float,
+    dispatch: Optional[Dict[str, float]] = None,
+) -> RunReport:
     states = sched.workers
     return RunReport(
         wall_time=wall,
@@ -358,6 +375,7 @@ def _build_report(sched: _TrackedScheduler, wall: float) -> RunReport:
         per_worker_busy={n: s.total_busy_time for n, s in states.items()},
         load_balance=sched.load_balance(),
         coverage=sched.coverage(),
+        dispatch_latency=dispatch,
     )
 
 
@@ -379,12 +397,18 @@ class HeteroRuntime:
         *,
         speed: Optional[float] = None,
         work_fn: Optional[WorkFn] = None,
+        backend: Optional[Union[str, BackendUnit]] = None,
     ) -> UnitSpec:
         if kind not in (WorkerKind.ACC, WorkerKind.CC):
             raise ValueError(f"unknown unit kind {kind!r}")
         if name in self._units:
             raise ValueError(f"duplicate unit {name!r}")
-        spec = UnitSpec(name=name, kind=kind, speed=speed, work_fn=work_fn)
+        if backend is not None:
+            # validate eagerly: spec strings must name a known backend and
+            # instance names must match the unit (completion routing key)
+            make_backend(backend, name)
+        spec = UnitSpec(name=name, kind=kind, speed=speed, work_fn=work_fn,
+                        backend=backend)
         self._units[name] = spec
         return spec
 
@@ -496,6 +520,7 @@ class HeteroRuntime:
         poll_interval: float = 0.0,
         scheduler_kwargs: Optional[dict] = None,
         elastic: Optional[Union[ElasticSchedule, Sequence[ElasticEvent]]] = None,
+        backend: Optional[Union[str, BackendUnit]] = None,
     ) -> RunReport:
         """Execute an iteration space across the registered units.
 
@@ -515,13 +540,24 @@ class HeteroRuntime:
         still invoked (untimed, at chunk completion, exactly once per
         completed chunk) so callers can record side effects.
 
-        ``elastic`` (SimulatedClock only) is a timeline of unit
-        join/leave events with *run-relative* times: leaves requeue the
-        unit's in-flight chunk to the survivors, joins steal
-        immediately, and the processed events are recorded in
-        ``RunReport.events``.  Events timed after the space is fully
-        covered are dropped.  With a sharded space the timeline applies
-        to every shard's unit replica set independently.
+        ``elastic`` is a timeline of unit join/leave events with
+        *run-relative* times, recorded in ``RunReport.events``; events
+        timed after the space is fully covered are dropped.  Under
+        :class:`SimulatedClock` a leave models an instant FPGA reprogram
+        (the in-flight chunk is requeued to survivors); under
+        :class:`WallClock` — supported on the ``"interrupt"`` engine only
+        — a leave *retires* the unit (its in-flight chunk completes and
+        counts, because real work cannot be recalled, and any uncollected
+        pre-split assignment is requeued).  Joins steal immediately in
+        both modes; wall-clock joins run the call's ``work_fn`` on a
+        fresh backend.  With a sharded space the timeline applies to
+        every shard's unit replica set independently.
+
+        ``backend`` overrides every unit's registered wall-clock backend
+        for this call: ``"inline"``, ``"thread"``/``"threads"``,
+        ``"process"``, ``"jax"``, or a
+        :class:`~repro.core.backends.BackendUnit` instance (single-unit
+        runs only).  See :mod:`repro.core.backends`.
         """
         if work_fn is not None and not callable(work_fn):
             raise TypeError(
@@ -538,10 +574,18 @@ class HeteroRuntime:
         simulated = isinstance(self.clock, SimulatedClock)
         elastic_events = self._normalize_elastic(elastic, specs)
         if elastic_events and not simulated:
-            raise ValueError(
-                "elastic join/leave schedules require a SimulatedClock "
-                "(deterministic virtual-time replay)"
-            )
+            if engine != "interrupt":
+                raise ValueError(
+                    "elastic join/leave under a WallClock needs the "
+                    "event-driven 'interrupt' engine (serial polling/inline "
+                    "drivers cannot observe membership changes mid-chunk); "
+                    "use a SimulatedClock for deterministic serial replay"
+                )
+            if any(ev.action == "join" for ev in elastic_events) and work_fn is None:
+                raise ValueError(
+                    "wall-clock joins need an explicit work_fn argument "
+                    "(the joining unit has no registered one)"
+                )
         fns: Dict[str, Optional[WorkFn]] = {
             s.name: (work_fn if work_fn is not None else s.work_fn) for s in specs
         }
@@ -553,6 +597,11 @@ class HeteroRuntime:
                 )
             if item_cost is not None:
                 raise ValueError("item_cost is only meaningful under SimulatedClock")
+        if isinstance(backend, BackendUnit) and len(specs) > 1:
+            raise ValueError(
+                "a single BackendUnit instance cannot back multiple units; "
+                "pass a backend spec string or register per-unit instances"
+            )
         if item_cost is not None and len(item_cost) != sp.num_items:
             raise ValueError(
                 f"item_cost has {len(item_cost)} entries for {sp.num_items} items"
@@ -564,9 +613,16 @@ class HeteroRuntime:
                     "a fixed {unit: (start, stop)} policy is ambiguous over a "
                     "ShardedSpace; use multidynamic/static/oracle"
                 )
+            if isinstance(backend, BackendUnit):
+                raise ValueError(
+                    "a single BackendUnit instance cannot back a ShardedSpace "
+                    "run (each shard engine needs its own workers); pass a "
+                    "backend spec string instead"
+                )
             return self._run_sharded(
                 sp, specs, fns, work_fn, policy, engine, acc_chunk,
                 item_cost, poll_interval, scheduler_kwargs, elastic_events,
+                backend,
             )
 
         sched = self._make_scheduler(
@@ -578,7 +634,11 @@ class HeteroRuntime:
                 poll_interval, clock=self.clock, elastic=elastic_events,
                 expected=sp.num_items, default_fn=work_fn,
             )
-        return self._run_wall(sched, fns, engine, poll_interval)
+        return self._run_wall(
+            sched, specs, fns, engine, poll_interval,
+            elastic=elastic_events, expected=sp.num_items,
+            default_fn=work_fn, backend=backend,
+        )
 
     @staticmethod
     def _normalize_elastic(
@@ -613,12 +673,45 @@ class HeteroRuntime:
     def _run_wall(
         self,
         sched: _TrackedScheduler,
+        specs: List[UnitSpec],
         fns: Dict[str, Optional[WorkFn]],
         engine: str,
         poll_interval: float,
+        *,
+        elastic: Sequence[ElasticEvent] = (),
+        expected: int,
+        default_fn: Optional[WorkFn] = None,
+        backend: Optional[Union[str, BackendUnit]] = None,
     ) -> RunReport:
         if engine == "interrupt":
-            rep = AsyncEngine(sched, fns).run()
+            # Event-driven dispatch over real backend units: each unit's
+            # chunks execute on its own backend (dedicated thread by
+            # default), completions arrive on a condition variable, and
+            # elastic membership changes apply between dispatches under
+            # the tracked scheduler's lock.
+            units = {
+                s.name: make_backend(
+                    backend if backend is not None else s.backend, s.name
+                )
+                for s in specs
+            }
+            eng = BackendEngine(
+                sched, fns, units,
+                expected=expected, elastic=elastic, default_fn=default_fn,
+                join_backend=lambda ev: make_backend(
+                    backend if not isinstance(backend, BackendUnit) else None,
+                    ev.unit,
+                ),
+            )
+            wall = eng.run()
+            if elastic and sched.items_done() < expected:
+                raise RuntimeError(
+                    f"elastic run stalled: {sched.items_done()}/{expected} "
+                    "items completed but every remaining unit departed"
+                )
+            rep = _build_report(sched, wall, dispatch=eng.dispatch_latency())
+            if eng.events:
+                rep.events = eng.events
         else:
             # "inline" is exactly the polling driver without the busy-wait
             # penalty: a deterministic serial round-robin on the caller
@@ -642,6 +735,7 @@ class HeteroRuntime:
         poll_interval: float,
         scheduler_kwargs: Optional[dict],
         elastic_events: List[ElasticEvent],
+        backend: Optional[Union[str, BackendUnit]] = None,
     ) -> RunReport:
         """One scheduler + engine per shard; merge into a global report.
 
@@ -652,15 +746,32 @@ class HeteroRuntime:
         slowest shard; on a wall clock interrupt/polling shards run on
         concurrent host threads while ``inline`` stays a deterministic
         sequential sweep.
+
+        Unit placement: by default every shard gets a replica of the full
+        unit set; a :attr:`~repro.core.space.ShardedSpace.placement`
+        mapping instead *pins* units to their shard's scheduler — the
+        multi-backend story, where a real device stream belongs to one
+        host and must not be driven by two shard engines at once.
+        Backend units are instantiated per shard, so each shard engine
+        owns its workers outright.
         """
         simulated = isinstance(self.clock, SimulatedClock)
+        shard_specs = self._place_units(space, specs)
+
+        def shard_events(k: int) -> List[ElasticEvent]:
+            # leaves only apply on shards that actually host the unit;
+            # joins are fresh names and replicate onto every shard
+            names = {s.name for s in shard_specs[k]}
+            return [ev for ev in elastic_events
+                    if ev.action == "join" or ev.unit in names]
+
         scheds: List[_TrackedScheduler] = []
         for k in range(space.num_shards):
             start, stop = space.shard_bounds(k)
             scheds.append(
                 self._make_scheduler(
-                    stop - start, specs, policy, acc_chunk, scheduler_kwargs,
-                    offset=start,
+                    stop - start, shard_specs[k], policy, acc_chunk,
+                    scheduler_kwargs, offset=start,
                 )
             )
 
@@ -671,21 +782,30 @@ class HeteroRuntime:
                 start, stop = space.shard_bounds(k)
                 sub = SimulatedClock(base)
                 reports[k] = self._run_simulated(
-                    sched, specs, dict(fns), engine, space.num_items,
+                    sched, shard_specs[k], dict(fns), engine, space.num_items,
                     item_cost, poll_interval, clock=sub,
-                    elastic=list(elastic_events), expected=stop - start,
+                    elastic=shard_events(k), expected=stop - start,
                     default_fn=work_fn,
                 )
             self.clock.advance(max(r.wall_time for r in reports))
         elif engine == "inline":
             for k, sched in enumerate(scheds):
-                reports[k] = self._run_wall(sched, fns, engine, poll_interval)
+                start, stop = space.shard_bounds(k)
+                reports[k] = self._run_wall(
+                    sched, shard_specs[k], fns, engine, poll_interval,
+                    expected=stop - start,
+                )
         else:
             errors: List[BaseException] = []
 
             def drive(k: int, sched: _TrackedScheduler) -> None:
+                start, stop = space.shard_bounds(k)
                 try:
-                    reports[k] = self._run_wall(sched, fns, engine, poll_interval)
+                    reports[k] = self._run_wall(
+                        sched, shard_specs[k], fns, engine, poll_interval,
+                        elastic=shard_events(k), expected=stop - start,
+                        default_fn=work_fn, backend=backend,
+                    )
                 except BaseException as exc:
                     errors.append(exc)
 
@@ -700,6 +820,44 @@ class HeteroRuntime:
             if errors:
                 raise errors[0]
         return _merge_shard_reports([r for r in reports if r is not None])
+
+    @staticmethod
+    def _place_units(
+        space: ShardedSpace, specs: List[UnitSpec]
+    ) -> List[List[UnitSpec]]:
+        """Resolve which units run on which shard.
+
+        Without a placement every shard replicates the full unit set
+        (PR 3 semantics).  With one, pinned units appear only on their
+        shard; unpinned units are still replicated everywhere.  A unit
+        backed by a :class:`~repro.core.backends.BackendUnit` *instance*
+        must be pinned — one real device stream cannot serve two
+        concurrent shard engines.
+        """
+        placement = getattr(space, "placement", None) or {}
+        unknown = sorted(set(placement) - {s.name for s in specs})
+        if unknown:
+            raise ValueError(f"placement pins unknown units {unknown}")
+        for s in specs:
+            if isinstance(s.backend, BackendUnit) and s.name not in placement:
+                raise ValueError(
+                    f"unit {s.name!r} has a concrete BackendUnit instance; "
+                    "a ShardedSpace needs it pinned via placement="
+                    "{unit: shard} so only one shard engine drives it"
+                )
+        shard_specs = [
+            [
+                s for s in specs
+                if placement.get(s.name, k) == k
+            ]
+            for k in range(space.num_shards)
+        ]
+        empty = [k for k, ss in enumerate(shard_specs) if not ss]
+        if empty:
+            raise ValueError(
+                f"placement leaves shards {empty} without any units"
+            )
+        return shard_specs
 
     # -- virtual-time execution --------------------------------------------
     def _run_simulated(
@@ -920,6 +1078,7 @@ def _merge_shard_reports(reports: List[RunReport]) -> RunReport:
     per_items: Dict[str, int] = {}
     per_chunks: Dict[str, int] = {}
     per_busy: Dict[str, float] = {}
+    per_dispatch: Dict[str, float] = {}
     coverage: List[tuple] = []
     events: List[dict] = []
     for k, rep in enumerate(reports):
@@ -929,6 +1088,8 @@ def _merge_shard_reports(reports: List[RunReport]) -> RunReport:
             per_chunks[f"s{k}/{n}"] = v
         for n, v in rep.per_worker_busy.items():
             per_busy[f"s{k}/{n}"] = v
+        for n, v in (rep.dispatch_latency or {}).items():
+            per_dispatch[f"s{k}/{n}"] = v
         coverage.extend(rep.coverage or [])
         for ev in rep.events or []:
             events.append({**ev, "unit": f"s{k}/{ev['unit']}", "shard": k})
@@ -945,4 +1106,5 @@ def _merge_shard_reports(reports: List[RunReport]) -> RunReport:
         coverage=sorted(coverage),
         events=events or None,
         shard_reports=list(reports),
+        dispatch_latency=per_dispatch or None,
     )

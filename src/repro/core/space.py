@@ -28,7 +28,7 @@ they compose with every policy, engine, and clock.
 from __future__ import annotations
 
 import math
-from typing import List, Sequence, Tuple, Union
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 from .scheduler import Chunk
 
@@ -123,6 +123,13 @@ class ShardedSpace(IterationSpace):
 
     The inner space may itself be a :class:`TiledSpace`, in which case
     shard slices are runs of tiles.
+
+    ``placement`` pins compute units to shards: a ``{unit_name: shard}``
+    mapping consumed by the runtime when it builds per-shard schedulers.
+    Unpinned units are replicated onto every shard (the PR 3 default);
+    pinned units are scheduled *only* by their shard's engine — required
+    for real backend units (a device stream belongs to one host) and the
+    shard-aware placement hook the ROADMAP names.
     """
 
     def __init__(
@@ -131,6 +138,7 @@ class ShardedSpace(IterationSpace):
         num_shards: int,
         *,
         weights: Sequence[float] = (),
+        placement: Optional[Mapping[str, int]] = None,
     ) -> None:
         if isinstance(inner, ShardedSpace):
             raise TypeError("ShardedSpace cannot nest another ShardedSpace")
@@ -156,6 +164,19 @@ class ShardedSpace(IterationSpace):
             self.weights = tuple(float(w) for w in weights)
         else:
             self.weights = tuple(1.0 for _ in range(num_shards))
+        if placement:
+            bad = {u: k for u, k in placement.items()
+                   if not 0 <= int(k) < num_shards}
+            if bad:
+                raise ValueError(
+                    f"placement maps units to nonexistent shards: {bad} "
+                    f"(have {num_shards} shards)"
+                )
+            self.placement: Optional[Dict[str, int]] = {
+                str(u): int(k) for u, k in placement.items()
+            }
+        else:
+            self.placement = None
         self._bounds = self._partition()
 
     def _partition(self) -> List[Tuple[int, int]]:

@@ -23,9 +23,9 @@ import jax.numpy as jnp
 
 from ...configs.paper_eneac import HotspotConfig
 from .hotspot import hotspot_hp_step_pallas, hotspot_hpc_pallas
-from .ref import hotspot_ref, hotspot_step_ref
+from .ref import hotspot_coefficients, hotspot_ref, hotspot_step_coeffs, hotspot_step_ref
 
-__all__ = ["hotspot", "hotspot_rows_chunk"]
+__all__ = ["hotspot", "hotspot_rows_chunk", "hotspot_step_banded"]
 
 
 def hotspot(
@@ -47,6 +47,28 @@ def hotspot(
             t = hotspot_hp_step_pallas(t, power, cfg, interpret=interpret)
         return t
     raise ValueError(f"mode must be cc|hp|hpc, got {mode!r}")
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "grid"))
+def hotspot_step_banded(
+    temp_band: jax.Array,   # band rows plus any halo rows already included
+    power_band: jax.Array,  # same shape as temp_band
+    cfg: HotspotConfig,
+    grid: tuple,            # (R, C) of the FULL grid
+) -> jax.Array:
+    """One step on a row band, bitwise equal to the whole-grid step.
+
+    The scheduler's unit of work for the hotspot row space: the caller
+    slices ``temp``/``power`` to the band *plus one halo row on each
+    interior side* and keeps only the band rows of the result.  Using the
+    full grid's coefficients (not the band's) is what makes this exactly
+    the rows the whole-grid :func:`~repro.kernels.hotspot.ref.
+    hotspot_step_ref` would produce — the invariant the
+    runtime-parity test pins under real-thread dispatch.
+    """
+    cap, rx, ry, rz, dt = hotspot_coefficients(cfg, grid[0], grid[1])
+    return hotspot_step_coeffs(temp_band, power_band, cfg.amb_temp,
+                               cap, rx, ry, rz, dt)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "steps"))

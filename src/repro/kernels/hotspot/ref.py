@@ -20,7 +20,12 @@ import jax.numpy as jnp
 
 from ...configs.paper_eneac import HotspotConfig
 
-__all__ = ["hotspot_coefficients", "hotspot_step_ref", "hotspot_ref"]
+__all__ = [
+    "hotspot_coefficients",
+    "hotspot_step_coeffs",
+    "hotspot_step_ref",
+    "hotspot_ref",
+]
 
 
 def hotspot_coefficients(cfg: HotspotConfig, rows: int, cols: int) -> Tuple[float, ...]:
@@ -35,9 +40,18 @@ def hotspot_coefficients(cfg: HotspotConfig, rows: int, cols: int) -> Tuple[floa
     return cap, rx, ry, rz, dt
 
 
-def hotspot_step_ref(temp: jax.Array, power: jax.Array, cfg: HotspotConfig) -> jax.Array:
-    rows, cols = temp.shape
-    cap, rx, ry, rz, dt = hotspot_coefficients(cfg, rows, cols)
+def hotspot_step_coeffs(
+    temp: jax.Array, power: jax.Array, amb_temp: float,
+    cap: float, rx: float, ry: float, rz: float, dt: float,
+) -> jax.Array:
+    """One explicit step with the coefficients given outright.
+
+    Factored out of :func:`hotspot_step_ref` so chunked execution (a row
+    band plus halo rows) can run the *identical* elementwise expression
+    with the full grid's coefficients — which is what makes banded
+    evaluation bitwise equal to the whole-grid step (see
+    ``kernels/hotspot/ops.py::hotspot_step_banded``).
+    """
     t = temp
     up = jnp.concatenate([t[:1], t[:-1]], axis=0)
     down = jnp.concatenate([t[1:], t[-1:]], axis=0)
@@ -47,9 +61,15 @@ def hotspot_step_ref(temp: jax.Array, power: jax.Array, cfg: HotspotConfig) -> j
         power
         + (left + right - 2.0 * t) / rx
         + (up + down - 2.0 * t) / ry
-        + (cfg.amb_temp - t) / rz
+        + (amb_temp - t) / rz
     )
     return t + delta
+
+
+def hotspot_step_ref(temp: jax.Array, power: jax.Array, cfg: HotspotConfig) -> jax.Array:
+    rows, cols = temp.shape
+    cap, rx, ry, rz, dt = hotspot_coefficients(cfg, rows, cols)
+    return hotspot_step_coeffs(temp, power, cfg.amb_temp, cap, rx, ry, rz, dt)
 
 
 def hotspot_ref(temp: jax.Array, power: jax.Array, cfg: HotspotConfig, steps: int) -> jax.Array:

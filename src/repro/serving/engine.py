@@ -28,7 +28,12 @@ coverage, utilization, load balance — what the serving bench prints).
 
 Slot state lives in the batched KV caches; a new request is prefilled
 with batch=1 and spliced into its slot (pytree scatter on the batch dim).
-See ``docs/architecture.md`` for how serving maps onto the runtime.
+``backend="threads"`` dispatches those prefills to per-slot
+:class:`~repro.core.backends.ThreadUnit`\\ s so the decode loop keeps
+stepping active slots while newcomers prefill — the backend-unit layer
+applied at the serving tier; ``backend="inline"`` (default) keeps the
+fully synchronous, deterministic admission path.  See
+``docs/architecture.md`` for how serving maps onto the runtime.
 """
 
 from __future__ import annotations
@@ -42,6 +47,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.backends import CompletionBus, ThreadUnit
 from ..core.runtime import HeteroRuntime, WorkQueue
 from ..core.scheduler import WorkerKind
 from ..core.space import FlatSpace
@@ -99,14 +105,20 @@ class ServingEngine:
         mode: str = "continuous",
         temperature: float = 0.0,
         seed: int = 0,
+        backend: str = "inline",
     ) -> None:
         if mode not in ("continuous", "static"):
             raise ValueError(mode)
+        if backend not in ("inline", "threads", "thread"):
+            raise ValueError(
+                f"backend must be inline|threads, got {backend!r}"
+            )
         self.model = model
         self.params = params
         self.slots = slots
         self.max_len = max_len
         self.mode = mode
+        self.backend = "threads" if backend == "thread" else backend
         self.temperature = temperature
         self.key = jax.random.PRNGKey(seed)
 
@@ -118,10 +130,24 @@ class ServingEngine:
         # the submitted requests so refill is completion-driven
         self.runtime = HeteroRuntime()
         for b in range(slots):
-            self.runtime.register_unit(f"slot{b}", WorkerKind.ACC)
+            self.runtime.register_unit(f"slot{b}", WorkerKind.ACC,
+                                       backend=self.backend)
         self._feed: Optional[WorkQueue] = None
         self._pending: List[Request] = []
         self.last_run_report = None
+
+        # backend="threads": prefill of admitted requests is dispatched to
+        # a per-slot ThreadUnit so the decode loop keeps stepping while new
+        # requests prefill — real asynchrony at the serving layer (the
+        # decode step itself stays lockstep-batched).
+        self._prefill_units: Optional[Dict[int, ThreadUnit]] = None
+        self._prefill_bus: Optional[CompletionBus] = None
+        self._prefilling: Dict[int, Request] = {}
+        if self.backend == "threads":
+            self._prefill_bus = CompletionBus()
+            self._prefill_units = {
+                b: ThreadUnit(f"slot{b}") for b in range(slots)
+            }
 
         self.caches = model.init_caches(slots, max_len)
         self.active: List[Optional[Request]] = [None] * slots
@@ -139,6 +165,22 @@ class ServingEngine:
         self._submit_times[req.rid] = time.perf_counter()
         self.queue.append(req)
 
+    def _prefill(self, req: Request):
+        """Batch=1 prefill + first greedy token (runs on a prefill unit)."""
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        single = self.model.init_caches(1, self.max_len)
+        logits, single = self.model.prefill_from(self.params, {"tokens": prompt}, single)
+        tok = int(np.asarray(sample(logits, temperature=0.0))[0])
+        return single, tok
+
+    def _install(self, slot: int, req: Request, single, tok: int) -> None:
+        """Splice a finished prefill into its decode slot (driver thread)."""
+        self.caches = _splice_slot(self.caches, single, slot)
+        self.active[slot] = req
+        self.generated[slot] = [tok]
+        self.lengths[slot] = len(req.prompt)
+        self.last_token[slot] = tok
+
     def _admit(self, slot: int) -> bool:
         if self._feed is None:
             return False
@@ -146,16 +188,30 @@ class ServingEngine:
         if chunk is None:
             return False
         req = self._pending[chunk.start]
-        prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
-        single = self.model.init_caches(1, self.max_len)
-        logits, single = self.model.prefill_from(self.params, {"tokens": prompt}, single)
-        self.caches = _splice_slot(self.caches, single, slot)
-        tok = int(np.asarray(sample(logits, temperature=0.0))[0])
-        self.active[slot] = req
-        self.generated[slot] = [tok]
-        self.lengths[slot] = len(req.prompt)
-        self.last_token[slot] = tok
+        if self._prefill_units is not None:
+            # async admission: the slot's prefill unit works while the
+            # decode loop keeps stepping the already-active slots
+            self._prefilling[slot] = req
+            self._prefill_units[slot].submit(
+                chunk, lambda c, req=req: self._prefill(req)
+            )
+            return True
+        self._install(slot, req, *self._prefill(req))
         return True
+
+    def _collect_prefills(self, block: bool = False) -> None:
+        """Splice any finished async prefills; optionally wait for one."""
+        if self._prefill_bus is None or not self._prefilling:
+            return
+        if block:
+            self._prefill_bus.wait(timeout=60.0)
+        for rec in self._prefill_bus.drain():
+            slot = int(rec.unit[len("slot"):])
+            req = self._prefilling.pop(slot)
+            if rec.error is not None:
+                raise rec.error
+            single, tok = rec.result
+            self._install(slot, req, single, tok)
 
     def _finish(self, slot: int) -> None:
         req = self.active[slot]
@@ -184,6 +240,17 @@ class ServingEngine:
     # ------------------------------------------------------------------
     def run(self) -> Dict[int, RequestResult]:
         """Serve until the queue drains and all slots finish."""
+        if self._prefill_units is not None:
+            for unit in self._prefill_units.values():
+                unit.start(self._prefill_bus)
+        try:
+            return self._run_loop()
+        finally:
+            if self._prefill_units is not None:
+                for unit in self._prefill_units.values():
+                    unit.close()
+
+    def _run_loop(self) -> Dict[int, RequestResult]:
         while True:
             # snapshot newly-submitted requests into a fresh feed whenever
             # the previous one has fully drained (feeds are per-batch: the
@@ -199,11 +266,17 @@ class ServingEngine:
             # mode; batch-granularity in static mode — the polling analogue)
             if self.mode == "continuous" or all(a is None for a in self.active):
                 for b in range(self.slots):
-                    if self.active[b] is None:
+                    if self.active[b] is None and b not in self._prefilling:
                         self._admit(b)
+            self._collect_prefills()
             if all(a is None for a in self.active):
+                if self._prefilling:
+                    # nothing decodable yet: sleep on the completion bus
+                    self._collect_prefills(block=True)
+                    continue
                 if self._feed is not None:
                     self.last_run_report = self._feed.report()
+                    self._attach_dispatch_stats(self.last_run_report)
                     self._feed = None
                 if self.queue:  # submissions landed after the snapshot
                     continue
@@ -228,6 +301,17 @@ class ServingEngine:
                 self.last_token[b] = tok
                 if self._slot_done(b):
                     self._finish(b)
+
+    def _attach_dispatch_stats(self, report) -> None:
+        """Expose prefill dispatch latency per slot on the batch report."""
+        if report is None or self._prefill_units is None:
+            return
+        stats = {}
+        for b, unit in self._prefill_units.items():
+            lats = unit.dispatch_latencies
+            if lats:
+                stats[f"slot{b}"] = sum(lats) / len(lats)
+        report.dispatch_latency = stats or None
 
     # ------------------------------------------------------------------
     def throughput_report(self) -> Dict[str, float]:

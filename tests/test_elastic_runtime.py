@@ -225,12 +225,23 @@ class TestRequeueInvariant:
 
 
 class TestElasticValidation:
-    def test_rejected_on_wall_clock(self):
+    def test_wall_clock_serial_engines_rejected(self):
+        # WallClock elasticity is the event-driven engine's feature (see
+        # tests/test_backends.py); the serial drivers cannot observe
+        # membership changes mid-chunk and must refuse the schedule.
+        for engine in ("polling", "inline"):
+            rt = HeteroRuntime()
+            rt.register_unit("a", WorkerKind.ACC, work_fn=lambda c: None)
+            with pytest.raises(ValueError, match="interrupt"):
+                rt.parallel_for(num_items=10, engine=engine,
+                                elastic=ElasticSchedule().leave(1.0, "a"))
+
+    def test_wall_clock_join_needs_work_fn(self):
         rt = HeteroRuntime()
         rt.register_unit("a", WorkerKind.ACC, work_fn=lambda c: None)
-        with pytest.raises(ValueError, match="SimulatedClock"):
+        with pytest.raises(ValueError, match="work_fn"):
             rt.parallel_for(num_items=10,
-                            elastic=ElasticSchedule().leave(1.0, "a"))
+                            elastic=ElasticSchedule().join(0.1, "b"))
 
     def test_leave_of_unknown_unit_rejected(self):
         rt = make_runtime()

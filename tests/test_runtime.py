@@ -231,6 +231,60 @@ class TestWorkQueue:
         assert_exact_tiling(rep.coverage, 7)
 
 
+@pytest.mark.slow
+class TestWallBackendMakespanGuard:
+    """Flake guard (ISSUE 4): real backends must track the *scheduled*
+    makespan.  The same Zipf workload is priced in virtual time under
+    SimulatedClock and then executed for real with sleep-calibrated
+    work functions; the wall makespan may not regress the scheduled one
+    by more than 10% — pinning that the event-driven engine's dispatch
+    overhead and thread wakeups stay in the noise for both the
+    overlapping (threads) and serial (inline) backends.
+    """
+
+    SPEEDS = {"acc0": 5e3, "acc1": 5e3, "cc0": 1250.0, "cc1": 1250.0}
+
+    def _runtime(self, prefix, clock=None):
+        import time as _time
+
+        rt = HeteroRuntime(clock=clock)
+        for name, speed in self.SPEEDS.items():
+            kind = WorkerKind.ACC if name.startswith("acc") else WorkerKind.CC
+
+            def fn(chunk, speed=speed):
+                _time.sleep((prefix[chunk.stop] - prefix[chunk.start]) / speed)
+
+            rt.register_unit(name, kind, speed=speed, work_fn=fn)
+        return rt
+
+    @pytest.mark.parametrize("backend,sim_engine", [
+        ("threads", "interrupt"),   # real overlap vs event-heap replay
+        ("inline", "inline"),       # serial backend vs serial replay
+    ])
+    def test_zipf_makespan_within_band(self, backend, sim_engine):
+        n = 512
+        costs = zipf_costs(n, seed=7)
+        prefix = np.concatenate([[0.0], np.cumsum(costs)])
+        scheduled = self._runtime(prefix, clock=SimulatedClock()).parallel_for(
+            num_items=n, policy="multidynamic", engine=sim_engine,
+            acc_chunk=64, item_cost=costs,
+        )
+        real = self._runtime(prefix).parallel_for(
+            num_items=n, policy="multidynamic", engine="interrupt",
+            acc_chunk=64, backend=backend,
+        )
+        assert real.items == scheduled.items == n
+        ratio = real.makespan / scheduled.makespan
+        assert ratio <= 1.10, (
+            f"{backend} backend regressed scheduled makespan by "
+            f"{(ratio - 1) * 100:.1f}% ({real.makespan:.3f}s vs "
+            f"{scheduled.makespan:.3f}s scheduled)"
+        )
+        # sleeps cannot finish early either: a large shortfall would mean
+        # the engine lost work, not that it got faster
+        assert ratio >= 0.90, (backend, ratio)
+
+
 class TestWallClock:
     def test_inline_engine_runs_real_work(self):
         rt = HeteroRuntime(clock=WallClock())

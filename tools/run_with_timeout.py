@@ -1,0 +1,76 @@
+"""Run a command with a hard wall-clock timeout and a diagnostic dump.
+
+    python tools/run_with_timeout.py --timeout 120 -- python -m pytest ...
+
+The concurrency battery (tests/test_backends.py) exercises real threads,
+condition variables, and elastic membership churn; its failure mode of
+interest is a *deadlock*, which a plain CI job reports as a 6-hour hang
+instead of a red X.  This wrapper turns hangs into failures:
+
+* the child runs in its own process group with ``PYTHONFAULTHANDLER=1``;
+* on timeout we first send SIGABRT so faulthandler dumps every thread's
+  traceback to stderr (the evidence you need to debug a deadlock), wait a
+  grace period, then SIGKILL the whole group;
+* exit code is 124 on timeout (the ``timeout(1)`` convention), otherwise
+  the child's own exit code.
+
+CI's ``threads`` job wraps the battery with this; pytest's built-in
+``--faulthandler-timeout`` complements it per-test (dump without kill).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import signal
+import subprocess
+import sys
+import time
+
+
+def main(argv: list) -> int:
+    ap = argparse.ArgumentParser(
+        description="Run a command with a hard timeout + traceback dump")
+    ap.add_argument("--timeout", type=float, required=True,
+                    help="wall-clock budget in seconds")
+    ap.add_argument("--grace", type=float, default=15.0,
+                    help="seconds to wait after SIGABRT before SIGKILL")
+    ap.add_argument("cmd", nargs=argparse.REMAINDER,
+                    help="command to run (prefix with --)")
+    args = ap.parse_args(argv)
+    cmd = args.cmd[1:] if args.cmd and args.cmd[0] == "--" else args.cmd
+    if not cmd:
+        ap.error("no command given")
+
+    env = dict(os.environ, PYTHONFAULTHANDLER="1")
+    proc = subprocess.Popen(cmd, env=env, start_new_session=True)
+    deadline = time.monotonic() + args.timeout
+    try:
+        return proc.wait(timeout=args.timeout)
+    except subprocess.TimeoutExpired:
+        pass
+    print(
+        f"\n[run_with_timeout] command exceeded {args.timeout:.0f}s: "
+        f"{' '.join(cmd)}\n[run_with_timeout] sending SIGABRT for a "
+        "faulthandler traceback dump...",
+        file=sys.stderr, flush=True,
+    )
+    try:
+        os.killpg(proc.pid, signal.SIGABRT)
+        proc.wait(timeout=args.grace)
+    except (subprocess.TimeoutExpired, ProcessLookupError):
+        try:
+            os.killpg(proc.pid, signal.SIGKILL)
+        except ProcessLookupError:
+            pass
+        proc.wait()
+    print(
+        f"[run_with_timeout] killed after "
+        f"{time.monotonic() - deadline + args.timeout:.0f}s",
+        file=sys.stderr, flush=True,
+    )
+    return 124
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
