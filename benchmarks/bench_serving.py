@@ -15,11 +15,12 @@ from repro.serving import Request, ServingEngine
 
 
 def serving_rows(
-    *, quick: bool = False, backend: str = "inline"
+    *, quick: bool = False, backend: str = "inline", workers: int = 1
 ) -> List[Tuple[str, float, str]]:
-    cfg = get_config("tinyllama-1.1b").smoke()
+    config_name, seed = "tinyllama-1.1b", 0
+    cfg = get_config(config_name).smoke()
     model = make_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
+    params = model.init(jax.random.PRNGKey(seed))
     n_req = 12 if quick else 24
     rng = np.random.default_rng(0)
     protos = [
@@ -27,40 +28,62 @@ def serving_rows(
          int(rng.integers(2, 24)))
         for _ in range(n_req)
     ]
+    # --backend remote: prefill admission runs in worker subprocesses —
+    # they rebuild the model from (config, smoke, seed), so results are
+    # identical; the transport cost shows up in prefill_disp_us.
+    handles: List = []
+    model_spec = None
+    engine_backend = backend
+    if backend == "remote":
+        from repro.core.transport import spawn_worker
+
+        handles = [spawn_worker() for _ in range(max(workers, 1))]
+        engine_backend = "remote:" + ",".join(h.address for h in handles)
+        model_spec = {"config": config_name, "smoke": True, "seed": seed}
     rows = []
     suffix = f"_{backend}" if backend != "inline" else ""
-    for mode in ("static", "continuous"):
-        eng = ServingEngine(model, params, slots=4, max_len=96, mode=mode,
-                            backend=backend)
-        for i, (prompt, mx) in enumerate(protos):
-            eng.submit(Request(rid=i, prompt=prompt, max_new_tokens=mx))
-        t0 = time.perf_counter()
-        eng.run()
-        wall = time.perf_counter() - t0
-        rep = eng.throughput_report()
-        # per-slot coverage/utilization from the runtime's RunReport of the
-        # final batch (the ROADMAP's last_run_report exposure)
-        run_rep = eng.last_run_report
-        slot_cols = ""
-        if run_rep is not None:
-            utils = run_rep.utilization.values()
-            slot_cols = (
-                f";load_balance={run_rep.load_balance:.3f}"
-                f";slot_util_mean={sum(utils) / len(utils):.3f}"
-                f";slot_items={'/'.join(str(v) for v in run_rep.per_worker_items.values())}"
-            )
-            if run_rep.dispatch_latency:
-                disp = run_rep.dispatch_latency.values()
-                slot_cols += (
-                    f";prefill_disp_us={sum(disp) / len(disp) * 1e6:.1f}"
-                )
-        rows.append((
-            f"serving_{mode}{suffix}",
-            wall / max(rep["steps"], 1) * 1e6,
-            f"us_per_step;tok_per_step={rep['tokens_per_step']:.3f};"
-            f"steps={rep['steps']};tokens={rep['tokens']}" + slot_cols,
-        ))
+    try:
+        for mode in ("static", "continuous"):
+            rows.append(_run_mode(model, params, protos, mode, suffix,
+                                  engine_backend, model_spec))
+    finally:
+        for h in handles:
+            h.terminate()
     return rows
+
+
+def _run_mode(model, params, protos, mode, suffix, engine_backend,
+              model_spec) -> Tuple[str, float, str]:
+    eng = ServingEngine(model, params, slots=4, max_len=96, mode=mode,
+                        backend=engine_backend, model_spec=model_spec)
+    for i, (prompt, mx) in enumerate(protos):
+        eng.submit(Request(rid=i, prompt=prompt, max_new_tokens=mx))
+    t0 = time.perf_counter()
+    eng.run()
+    wall = time.perf_counter() - t0
+    rep = eng.throughput_report()
+    # per-slot coverage/utilization from the runtime's RunReport of the
+    # final batch (the ROADMAP's last_run_report exposure)
+    run_rep = eng.last_run_report
+    slot_cols = ""
+    if run_rep is not None:
+        utils = run_rep.utilization.values()
+        slot_cols = (
+            f";load_balance={run_rep.load_balance:.3f}"
+            f";slot_util_mean={sum(utils) / len(utils):.3f}"
+            f";slot_items={'/'.join(str(v) for v in run_rep.per_worker_items.values())}"
+        )
+        if run_rep.dispatch_latency:
+            disp = run_rep.dispatch_latency.values()
+            slot_cols += (
+                f";prefill_disp_us={sum(disp) / len(disp) * 1e6:.1f}"
+            )
+    return (
+        f"serving_{mode}{suffix}",
+        wall / max(rep["steps"], 1) * 1e6,
+        f"us_per_step;tok_per_step={rep['tokens_per_step']:.3f};"
+        f"steps={rep['steps']};tokens={rep['tokens']}" + slot_cols,
+    )
 
 
 def main() -> None:
@@ -70,14 +93,19 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="reduced sizes (CI-scale)")
     ap.add_argument("--backend", default="inline",
-                    choices=["inline", "threads"],
-                    help="prefill admission path: synchronous (inline) or "
+                    choices=["inline", "threads", "remote"],
+                    help="prefill admission path: synchronous (inline), "
                          "per-slot ThreadUnits (async prefill overlapping "
-                         "the decode loop)")
+                         "the decode loop), or per-slot RemoteUnits "
+                         "prefilling in spawned worker subprocesses over "
+                         "SocketTransport")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="worker subprocesses for --backend remote")
     args = ap.parse_args()
     print("name,us_per_step,derived")
     for name, us, derived in serving_rows(quick=args.quick,
-                                          backend=args.backend):
+                                          backend=args.backend,
+                                          workers=args.workers):
         print(f"{name},{us:.3f},{derived}")
 
 

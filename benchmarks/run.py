@@ -41,10 +41,10 @@ def main() -> None:
             t1 = table1(bench, quick=quick)
             rows += [(n, 1e3 / max(thr, 1e-9),
                       f"throughput={thr:.2f}items_per_ms;load_balance={lb:.2f}")
-                     for n, thr, _, lb, _um, _un, _d in t1]
+                     for n, thr, _, lb, *_rest in t1]
         rows += [(n, 1e3 / max(thr, 1e-9),
                   f"throughput={thr:.2f}items_per_ms;load_balance={lb:.2f}")
-                 for n, thr, _, lb, _um, _un, _d in chunk_sweep(quick=quick)]
+                 for n, thr, _, lb, *_rest in chunk_sweep(quick=quick)]
 
     from benchmarks.roofline import roofline_rows
     rows += roofline_rows()

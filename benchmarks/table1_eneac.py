@@ -127,11 +127,17 @@ def calibrate_spmm(rows: int = 4096, cols: int = 4096, n: int = 128) -> Dict[str
 # ---------------------------------------------------------------------------
 # simulation: real schedulers + sleep-calibrated workers
 # ---------------------------------------------------------------------------
+# SleepWork lives in repro.core.transport: work functions cross the remote
+# backend's pickling transport by module reference, so they cannot be
+# defined in this script's __main__.
+from repro.core.transport import SleepWork  # noqa: E402
+
+
 def run_config(
     units: str, port: str, interrupts: bool,
     *, n_items: int, acc_chunk: int, t_cc: float, t_acc: float,
     hp_penalty: float, time_scale: float = 1.0, shards: int = 1,
-    backend: str = "threads",
+    backend: str = "threads", worker_addrs: List[str] = (),
 ) -> Tuple[float, RunReport]:
     """Returns (throughput in items/ms — paper units, the full RunReport).
 
@@ -142,23 +148,39 @@ def run_config(
 
     ``backend`` selects where interrupt-engine chunks execute:
     ``"threads"`` (dedicated worker thread per unit — real overlap, the
-    default) or ``"inline"`` (serial execution on the dispatcher — the
-    no-overlap control, isolating pure dispatch overhead).
+    default), ``"inline"`` (serial execution on the dispatcher — the
+    no-overlap control, isolating pure dispatch overhead), or
+    ``"remote"`` (each unit proxies to a worker *subprocess* over a
+    SocketTransport — ``worker_addrs`` assigns units to the spawned
+    workers round-robin, and the summary's ``wire_us`` column becomes
+    the measured wire + remote-queue share of dispatch latency).
     """
+    if backend == "remote" and not worker_addrs:
+        raise ValueError("backend='remote' needs worker_addrs")
+    if backend == "remote" and shards > 1:
+        raise ValueError(
+            "remote units are one-host resources: combining --shards with "
+            "--backend remote needs explicit ShardedSpace placement, which "
+            "this benchmark does not model"
+        )
     rt = HeteroRuntime()
+    registered = 0
 
-    def worker(t_item):
-        def fn(chunk):
-            time.sleep(chunk.size * t_item * time_scale)
-        return fn
+    def register(name, kind, t_item):
+        nonlocal registered
+        spec = (f"remote:{worker_addrs[registered % len(worker_addrs)]}"
+                if backend == "remote" else backend)
+        rt.register_unit(name, kind, work_fn=SleepWork(t_item * time_scale),
+                         backend=spec)
+        registered += 1
 
     if units in ("acc", "hybrid"):
         t = t_acc * (hp_penalty if port == "hp" else 1.0)
         for i in range(N_ACC):
-            rt.register_unit(f"acc{i}", WorkerKind.ACC, work_fn=worker(t))
+            register(f"acc{i}", WorkerKind.ACC, t)
     if units in ("cc", "hybrid"):
         for i in range(N_CC):
-            rt.register_unit(f"cc{i}", WorkerKind.CC, work_fn=worker(t_cc))
+            register(f"cc{i}", WorkerKind.CC, t_cc)
 
     # Inter.=No configs poll their accelerators (the paper's host thread
     # burns cycles checking completion); CC-only has nothing to poll — the
@@ -168,27 +190,31 @@ def run_config(
     rep = rt.parallel_for(
         num_items=0 if space is not None else n_items, space=space,
         policy="multidynamic", engine=engine, acc_chunk=acc_chunk,
-        backend=backend,
     )
     return rep.items / (rep.wall_time / time_scale) / 1e3, rep
 
 
-def report_columns(rep: RunReport) -> Tuple[float, float, float, float]:
-    """(load_balance, util_mean, util_min, disp_us) — the summary columns.
+def report_columns(rep: RunReport) -> Tuple[float, float, float, float, float]:
+    """(load_balance, util_mean, util_min, disp_us, wire_us) — the summary.
 
     ``disp_us`` is the mean backend dispatch latency across units in
-    microseconds (0 when the run had no backend layer, e.g. polling).
+    microseconds (0 when the run had no backend layer, e.g. polling);
+    ``wire_us`` is its wire + remote-queue component, nonzero only when
+    units executed behind a transport (``--backend remote``).
     """
     utils = list(rep.utilization.values())
     disp = list((rep.dispatch_latency or {}).values())
     disp_us = (sum(disp) / len(disp) * 1e6) if disp else 0.0
-    return rep.load_balance, sum(utils) / len(utils), min(utils), disp_us
+    wire = list((rep.wire_latency or {}).values())
+    wire_us = (sum(wire) / len(wire) * 1e6) if wire else 0.0
+    return (rep.load_balance, sum(utils) / len(utils), min(utils), disp_us,
+            wire_us)
 
 
 def table1(
     benchmark: str, *, quick: bool = False, shards: int = 1,
-    backend: str = "threads",
-) -> List[Tuple[str, float, str, float, float, float, float]]:
+    backend: str = "threads", workers: int = 2,
+) -> List[Tuple[str, float, str, float, float, float, float, float]]:
     if benchmark == "hotspot":
         cal = calibrate_hotspot(256 if quick else 512)
         n_items, acc_chunk = cal["items"], (64 if quick else 128)
@@ -208,21 +234,39 @@ def table1(
     time_scale = target_s / (n_items * t_cc)
     rows = []
     suffix = f"_x{shards}shards" if shards > 1 else ""
-    for cid, label, units, port, interrupts in TABLE1_CONFIGS:
-        thr, rep = run_config(
-            units, port or "hpc", interrupts,
-            n_items=n_items, acc_chunk=acc_chunk,
-            t_cc=t_cc, t_acc=t_acc, hp_penalty=hp_penalty,
-            time_scale=time_scale, shards=shards, backend=backend,
-        )
-        lb, u_mean, u_min, disp_us = report_columns(rep)
-        rows.append((f"table1_{benchmark}_{cid}_{label}{suffix}", thr,
-                     "items_per_ms", lb, u_mean, u_min, disp_us))
+    if backend == "remote":
+        suffix += "_remote"
+    handles, addrs = _spawn_remote_workers(backend, workers)
+    try:
+        for cid, label, units, port, interrupts in TABLE1_CONFIGS:
+            thr, rep = run_config(
+                units, port or "hpc", interrupts,
+                n_items=n_items, acc_chunk=acc_chunk,
+                t_cc=t_cc, t_acc=t_acc, hp_penalty=hp_penalty,
+                time_scale=time_scale, shards=shards, backend=backend,
+                worker_addrs=addrs,
+            )
+            lb, u_mean, u_min, disp_us, wire_us = report_columns(rep)
+            rows.append((f"table1_{benchmark}_{cid}_{label}{suffix}", thr,
+                         "items_per_ms", lb, u_mean, u_min, disp_us, wire_us))
+    finally:
+        for h in handles:
+            h.terminate()
     return rows
 
 
+def _spawn_remote_workers(backend: str, workers: int):
+    """(handles, addresses): worker subprocesses for ``backend='remote'``."""
+    if backend != "remote":
+        return [], []
+    from repro.core.transport import spawn_worker
+
+    handles = [spawn_worker() for _ in range(max(workers, 1))]
+    return handles, [h.address for h in handles]
+
+
 def chunk_sweep(benchmark: str = "hotspot", *, quick: bool = False,
-                backend: str = "threads"):
+                backend: str = "threads", workers: int = 2):
     """Fig-4 reproduction: hybrid(+INT) throughput vs ACC chunk size —
     exhibits the paper's cliff when one chunk exceeds ~1/4 of the space."""
     cal = calibrate_hotspot(256 if quick else 512)
@@ -231,15 +275,20 @@ def chunk_sweep(benchmark: str = "hotspot", *, quick: bool = False,
     time_scale = (1.0 if quick else 2.5) / (n_items * cal["cc"])
     rows = []
     sweep = sorted({16, 32, 64, 128, 256, n_items // 4, n_items // 2})
-    for chunk in sweep:
-        thr, rep = run_config(
-            "hybrid", "hpc", True, n_items=n_items, acc_chunk=chunk,
-            t_cc=cal["cc"], t_acc=cal["acc_hpc"], hp_penalty=hp_penalty,
-            time_scale=time_scale, backend=backend,
-        )
-        lb, u_mean, u_min, disp_us = report_columns(rep)
-        rows.append((f"chunksweep_{benchmark}_c{chunk}", thr, "items_per_ms",
-                     lb, u_mean, u_min, disp_us))
+    handles, addrs = _spawn_remote_workers(backend, workers)
+    try:
+        for chunk in sweep:
+            thr, rep = run_config(
+                "hybrid", "hpc", True, n_items=n_items, acc_chunk=chunk,
+                t_cc=cal["cc"], t_acc=cal["acc_hpc"], hp_penalty=hp_penalty,
+                time_scale=time_scale, backend=backend, worker_addrs=addrs,
+            )
+            lb, u_mean, u_min, disp_us, wire_us = report_columns(rep)
+            rows.append((f"chunksweep_{benchmark}_c{chunk}", thr,
+                         "items_per_ms", lb, u_mean, u_min, disp_us, wire_us))
+    finally:
+        for h in handles:
+            h.terminate()
     return rows
 
 
@@ -254,19 +303,27 @@ def main() -> None:
                     help="host shards: each runs its own scheduler/engine "
                          "over a slice of the space (ShardedSpace)")
     ap.add_argument("--backend", default="threads",
-                    choices=["threads", "inline"],
+                    choices=["threads", "inline", "remote"],
                     help="backend units for interrupt-engine configs: "
-                         "dedicated worker threads (real overlap) or "
-                         "inline serial execution (dispatch-overhead "
-                         "control)")
+                         "dedicated worker threads (real overlap), inline "
+                         "serial execution (dispatch-overhead control), or "
+                         "remote worker subprocesses over SocketTransport "
+                         "(multi-host dispatch; adds the wire_us column's "
+                         "measured wire latency)")
+    ap.add_argument("--workers", type=int, default=2,
+                    help="worker subprocesses to spawn for --backend remote "
+                         "(units are assigned round-robin)")
     args = ap.parse_args()
-    print("name,throughput,unit,load_balance,util_mean,util_min,disp_us")
+    print("name,throughput,unit,load_balance,util_mean,util_min,disp_us,"
+          "wire_us")
     for bench in args.benchmarks:
-        for name, thr, unit, lb, u_mean, u_min, disp_us in table1(
-            bench, quick=args.quick, shards=args.shards, backend=args.backend
+        for (name, thr, unit, lb, u_mean, u_min, disp_us,
+             wire_us) in table1(
+            bench, quick=args.quick, shards=args.shards,
+            backend=args.backend, workers=args.workers,
         ):
             print(f"{name},{thr:.3f},{unit},{lb:.3f},{u_mean:.3f},"
-                  f"{u_min:.3f},{disp_us:.1f}")
+                  f"{u_min:.3f},{disp_us:.1f},{wire_us:.1f}")
 
 
 if __name__ == "__main__":

@@ -5,6 +5,10 @@
   analogue) + busy-wait baseline.
 * :mod:`repro.core.backends` — real backend units (threads, process
   pools, jax device streams) + the event-driven wall-clock engine.
+* :mod:`repro.core.transport` — message-level transports (loopback,
+  TCP, fault-injecting) and remote shard engines: ``RemoteWorker``
+  hosts backend units behind a transport, ``RemoteUnit`` proxies them
+  into the runtime as ordinary units.
 * :mod:`repro.core.hetero` — throughput-proportional work partitioning.
 * :mod:`repro.core.straggler` — straggler detection and mitigation.
 * :mod:`repro.core.elastic` — node-failure handling / mesh rescale plans.
@@ -26,10 +30,24 @@ from .backends import (
     BackendEngine,
     BackendUnit,
     CompletionBus,
+    CompletionRecord,
     InlineUnit,
     JaxDeviceUnit,
     ProcessPoolUnit,
     ThreadUnit,
+    WorkerLost,
+)
+from .transport import (
+    FlakyTransport,
+    LoopbackTransport,
+    RemoteUnit,
+    RemoteWorker,
+    SocketTransport,
+    Transport,
+    TransportClosed,
+    TransportError,
+    WorkerServer,
+    spawn_worker,
 )
 from .space import FlatSpace, IterationSpace, ShardedSpace, TiledSpace
 from .runtime import HeteroRuntime, SimulatedClock, UnitSpec, WallClock, WorkQueue
@@ -62,10 +80,22 @@ __all__ = [
     "BackendEngine",
     "BackendUnit",
     "CompletionBus",
+    "CompletionRecord",
     "InlineUnit",
     "ThreadUnit",
     "ProcessPoolUnit",
     "JaxDeviceUnit",
+    "WorkerLost",
+    "Transport",
+    "TransportError",
+    "TransportClosed",
+    "LoopbackTransport",
+    "SocketTransport",
+    "FlakyTransport",
+    "RemoteUnit",
+    "RemoteWorker",
+    "WorkerServer",
+    "spawn_worker",
     "HeteroPartition",
     "HeterogeneousPartitioner",
     "ThroughputTracker",

@@ -23,6 +23,11 @@ that boundary:
   device's stream: jitted calls return immediately (XLA async dispatch)
   and a waiter thread turns ``block_until_ready`` into the completion
   signal.  Degrades to :class:`ThreadUnit` semantics when jax is absent.
+* :class:`~repro.core.transport.RemoteUnit` (in :mod:`repro.core.transport`)
+  — the same protocol stretched across a process/host boundary: submits
+  become frames on a :class:`~repro.core.transport.Transport`, and a
+  worker connection drop surfaces as a :class:`WorkerLost` completion the
+  engine answers by requeueing the in-flight chunk (see below).
 * :class:`BackendEngine` — the event-driven dispatcher the runtime's
   ``_run_wall`` builds on: one loop thread hands each idle backend a
   chunk the moment it goes idle, completions arrive on a condition
@@ -64,6 +69,7 @@ __all__ = [
     "ThreadUnit",
     "ProcessPoolUnit",
     "JaxDeviceUnit",
+    "WorkerLost",
     "BackendEngine",
     "BACKENDS",
     "make_backend",
@@ -71,7 +77,27 @@ __all__ = [
 
 WorkFn = Callable[[Chunk], Any]
 
-BACKENDS = ("inline", "thread", "process", "jax")
+BACKENDS = ("inline", "thread", "process", "jax", "remote")
+
+# The full spec grammar, quoted once so every "unknown backend" error can
+# list it (tests pin this — an unknown spec must teach the valid ones).
+VALID_BACKEND_SPECS = (
+    "'inline'", "'thread'/'threads'", "'process'/'processes'", "'jax'",
+    "'remote:<host:port>'",
+)
+
+
+class WorkerLost(ConnectionError):
+    """A unit's execution medium died with a chunk possibly in flight.
+
+    Posted as a :class:`CompletionRecord` error by transport-backed units
+    (:class:`~repro.core.transport.RemoteUnit`) when the connection to
+    their worker drops or retransmits are exhausted.  Unlike a work-
+    function error — which fails the run — a lost worker is a *membership*
+    event: :class:`BackendEngine` removes the unit and requeues its
+    in-flight chunk to the survivors exactly once, the same path an
+    elastic leave takes.
+    """
 
 
 @dataclass
@@ -434,16 +460,29 @@ def make_backend(spec: Union[str, BackendUnit, None], name: str) -> BackendUnit:
         return spec
     if spec is None:
         return ThreadUnit(name)
+    text = str(spec)
+    if text.startswith("remote:"):
+        address = text[len("remote:"):]
+        if not address:
+            raise ValueError(
+                "remote backend spec needs a worker address: "
+                "'remote:<host:port>'"
+            )
+        from .transport import RemoteUnit  # late: transport builds on this module
+        return RemoteUnit(name, address=address)
     aliases = {
         "inline": InlineUnit,
         "thread": ThreadUnit, "threads": ThreadUnit,
         "process": ProcessPoolUnit, "processes": ProcessPoolUnit,
         "jax": JaxDeviceUnit,
     }
-    cls = aliases.get(str(spec))
+    cls = aliases.get(text)
     if cls is None:
-        raise ValueError(f"unknown backend {spec!r} (want one of {BACKENDS} "
-                         "or a BackendUnit instance)")
+        raise ValueError(
+            f"unknown backend {spec!r}: valid specs are "
+            + ", ".join(VALID_BACKEND_SPECS)
+            + ", or a BackendUnit instance"
+        )
     return cls(name)
 
 
@@ -558,8 +597,36 @@ class BackendEngine:
                 })
                 self._dispatch(ev.unit)
 
+    def _lose_unit(self, rec: CompletionRecord) -> None:
+        """The medium (not the code) lost this unit: requeue, don't fail.
+
+        A transport-backed unit posts a :class:`WorkerLost` completion when
+        its connection drops or retransmits are exhausted.  The chunk was
+        *not* completed — so instead of ``complete()`` the unit is removed
+        from the tracked scheduler, which moves its in-flight chunk (and
+        any never-issued pre-split assignment) to the requeue buffer under
+        the scheduler's lock: survivors pick the span up exactly once.
+        Recorded as an ``action="lost"`` entry in ``RunReport.events``.
+        """
+        name = rec.unit
+        self._busy.discard(name)
+        self._leaving.discard(name)
+        if name not in self.sched.removed:
+            self.sched.remove_unit(name)
+        unit = self.units.pop(name, None)
+        if unit is not None and name in self._own_units:
+            unit.close()
+        self.events.append({
+            "t": self._now(), "action": "lost", "unit": name,
+            "requeued": (rec.chunk.start, rec.chunk.stop)
+            if rec.chunk is not None else None,
+        })
+
     def _process_completions(self, recs: List[CompletionRecord]) -> None:
         for rec in recs:
+            if isinstance(rec.error, WorkerLost):
+                self._lose_unit(rec)
+                continue
             self._busy.discard(rec.unit)
             self.sched.complete(rec.unit, rec.elapsed)
             if rec.error is not None:
@@ -619,3 +686,19 @@ class BackendEngine:
         for name in self.sched.workers:
             out.setdefault(name, 0.0)
         return out
+
+    def wire_latency(self) -> Optional[Dict[str, float]]:
+        """Mean send->remote-execution-start seconds per transport unit.
+
+        Only units that went over a transport carry ``wire_latencies``
+        (see :class:`~repro.core.transport.RemoteUnit`); for everything
+        else the wire component of dispatch latency is zero by
+        construction, so units without samples are omitted and the whole
+        map is ``None`` when no remote unit took part.
+        """
+        out: Dict[str, float] = {}
+        for name, unit in self._all_units.items():
+            lats = getattr(unit, "wire_latencies", None)
+            if lats:
+                out[name] = sum(lats) / len(lats)
+        return out or None

@@ -87,6 +87,14 @@ class RunReport:
     # Low values with overlapping busy times are what "real asynchrony"
     # looks like: the dispatcher never sits between a free unit and work.
     dispatch_latency: Optional[Dict[str, float]] = None
+    # The wire + remote-queue component of dispatch_latency for units that
+    # executed behind a transport (repro.core.transport.RemoteUnit): mean
+    # first-send -> remote-execution-start seconds per unit.  The local
+    # queue component is dispatch_latency[u] - wire_latency[u].  None when
+    # no remote unit took part in the run.  Measured by differencing
+    # client- and worker-side monotonic clocks, so only meaningful when
+    # both share a machine (worker subprocesses).
+    wire_latency: Optional[Dict[str, float]] = None
 
     @property
     def throughput(self) -> float:

@@ -364,6 +364,7 @@ class WorkQueue:
 def _build_report(
     sched: _TrackedScheduler, wall: float,
     dispatch: Optional[Dict[str, float]] = None,
+    wire: Optional[Dict[str, float]] = None,
 ) -> RunReport:
     states = sched.workers
     return RunReport(
@@ -376,6 +377,7 @@ def _build_report(
         load_balance=sched.load_balance(),
         coverage=sched.coverage(),
         dispatch_latency=dispatch,
+        wire_latency=wire,
     )
 
 
@@ -555,9 +557,13 @@ class HeteroRuntime:
 
         ``backend`` overrides every unit's registered wall-clock backend
         for this call: ``"inline"``, ``"thread"``/``"threads"``,
-        ``"process"``, ``"jax"``, or a
-        :class:`~repro.core.backends.BackendUnit` instance (single-unit
-        runs only).  See :mod:`repro.core.backends`.
+        ``"process"``, ``"jax"``, ``"remote:<host:port>"`` (a
+        :class:`~repro.core.transport.RemoteUnit` proxy to a worker
+        hosting the execution across a transport; non-sharded runs only
+        at call level — register per-unit addresses and pin them for
+        sharded runs), or a :class:`~repro.core.backends.BackendUnit`
+        instance (single-unit runs only).  See
+        :mod:`repro.core.backends` and :mod:`repro.core.transport`.
         """
         if work_fn is not None and not callable(work_fn):
             raise TypeError(
@@ -618,6 +624,13 @@ class HeteroRuntime:
                     "a single BackendUnit instance cannot back a ShardedSpace "
                     "run (each shard engine needs its own workers); pass a "
                     "backend spec string instead"
+                )
+            if isinstance(backend, str) and backend.startswith("remote:"):
+                raise ValueError(
+                    "a call-level remote backend would make every shard "
+                    "replicate its units onto one worker host; register "
+                    "per-unit remote backends and pin them via "
+                    "ShardedSpace(placement={unit: shard}) instead"
                 )
             return self._run_sharded(
                 sp, specs, fns, work_fn, policy, engine, acc_chunk,
@@ -704,12 +717,15 @@ class HeteroRuntime:
                 ),
             )
             wall = eng.run()
-            if elastic and sched.items_done() < expected:
+            lost = any(ev.get("action") == "lost" for ev in eng.events)
+            if (elastic or lost) and sched.items_done() < expected:
                 raise RuntimeError(
-                    f"elastic run stalled: {sched.items_done()}/{expected} "
-                    "items completed but every remaining unit departed"
+                    f"run stalled: {sched.items_done()}/{expected} items "
+                    "completed but every remaining unit departed or lost "
+                    "its worker"
                 )
-            rep = _build_report(sched, wall, dispatch=eng.dispatch_latency())
+            rep = _build_report(sched, wall, dispatch=eng.dispatch_latency(),
+                                wire=eng.wire_latency())
             if eng.events:
                 rep.events = eng.events
         else:
@@ -843,6 +859,15 @@ class HeteroRuntime:
                 raise ValueError(
                     f"unit {s.name!r} has a concrete BackendUnit instance; "
                     "a ShardedSpace needs it pinned via placement="
+                    "{unit: shard} so only one shard engine drives it"
+                )
+            if (isinstance(s.backend, str)
+                    and s.backend.startswith("remote:")
+                    and s.name not in placement):
+                raise ValueError(
+                    f"unit {s.name!r} is backed by remote worker "
+                    f"{s.backend[len('remote:'):]!r} — one host; a "
+                    "ShardedSpace needs it pinned via placement="
                     "{unit: shard} so only one shard engine drives it"
                 )
         shard_specs = [
@@ -1079,6 +1104,7 @@ def _merge_shard_reports(reports: List[RunReport]) -> RunReport:
     per_chunks: Dict[str, int] = {}
     per_busy: Dict[str, float] = {}
     per_dispatch: Dict[str, float] = {}
+    per_wire: Dict[str, float] = {}
     coverage: List[tuple] = []
     events: List[dict] = []
     for k, rep in enumerate(reports):
@@ -1090,6 +1116,8 @@ def _merge_shard_reports(reports: List[RunReport]) -> RunReport:
             per_busy[f"s{k}/{n}"] = v
         for n, v in (rep.dispatch_latency or {}).items():
             per_dispatch[f"s{k}/{n}"] = v
+        for n, v in (rep.wire_latency or {}).items():
+            per_wire[f"s{k}/{n}"] = v
         coverage.extend(rep.coverage or [])
         for ev in rep.events or []:
             events.append({**ev, "unit": f"s{k}/{ev['unit']}", "shard": k})
@@ -1107,4 +1135,5 @@ def _merge_shard_reports(reports: List[RunReport]) -> RunReport:
         events=events or None,
         shard_reports=list(reports),
         dispatch_latency=per_dispatch or None,
+        wire_latency=per_wire or None,
     )

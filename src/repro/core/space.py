@@ -128,8 +128,10 @@ class ShardedSpace(IterationSpace):
     mapping consumed by the runtime when it builds per-shard schedulers.
     Unpinned units are replicated onto every shard (the PR 3 default);
     pinned units are scheduled *only* by their shard's engine — required
-    for real backend units (a device stream belongs to one host) and the
-    shard-aware placement hook the ROADMAP names.
+    for real backend units (a device stream belongs to one host) and for
+    remote units (``backend="remote:<host:port>"``: the worker behind
+    the transport *is* a host, so exactly one shard engine may drive
+    it), the shard-aware placement hook the ROADMAP names.
     """
 
     def __init__(

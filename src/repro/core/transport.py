@@ -1,0 +1,1041 @@
+"""Multi-host transport backends: one runtime driving remote shard engines.
+
+The ENEAC loop so far kept every compute unit in the dispatcher's address
+space — threads, process pools, device streams.  This module stretches
+the :class:`~repro.core.backends.BackendUnit` boundary across a *message
+transport*, the way HEROv2 (arXiv:2201.03861) stretches the host↔PULP
+offload path across a real interconnect, while keeping dispatch latency
+observable end-to-end (HTS, arXiv:1907.00271):
+
+* **Frame codec** — length-prefixed pickled frames
+  (:func:`encode_frame`, :class:`FrameDecoder`): a 4-byte big-endian
+  payload length followed by the pickled frame dict.
+* :class:`Transport` — the message boundary: ``send(frame)`` /
+  ``recv(timeout)`` / ``close()``.  Two real implementations:
+  :class:`LoopbackTransport` (an in-process queue pair that passes frames
+  by reference — the deterministic test medium) and
+  :class:`SocketTransport` (localhost/LAN TCP with the length-prefixed
+  pickle codec).  :class:`FlakyTransport` wraps either with seeded
+  drop / delay / duplicate / reorder fault injection — the first place in
+  this repo where a completion can be lost by the *medium* instead of the
+  code, which is why the reliability protocol below exists.
+* :class:`RemoteWorker` — the far side: a serve loop that hosts real
+  backend units (thread / inline / process / jax) behind one transport
+  session, executes submitted chunks on them, and pumps their
+  completions back as frames.  :class:`WorkerServer` accepts TCP
+  connections and runs one :class:`RemoteWorker` per connection;
+  ``python -m repro.core.transport`` serves one from a fresh process and
+  :func:`spawn_worker` launches that as a managed subprocess.
+* :class:`RemoteUnit` — the near side: a
+  :class:`~repro.core.backends.BackendUnit` proxy that makes a remote
+  worker look like any other unit.  ``submit(chunk, work_fn)`` forwards a
+  frame without blocking; a receiver thread pumps ``done`` frames back
+  onto the run's :class:`~repro.core.backends.CompletionBus`; dispatch
+  latency is split into its local-queue and wire components
+  (``RunReport.wire_latency``).
+
+Reliability protocol (what makes the FlakyTransport battery pass):
+
+* every submit carries a per-unit monotonically increasing ``seq``; the
+  engine guarantees one chunk in flight per unit, so the proxy
+  retransmits the pending frame on a timer until its completion arrives;
+* the worker executes a seq **at most once**: duplicates of an already
+  accepted seq re-send the cached ``done`` frame, or answer ``busy``
+  while it is still executing — so dropped/duplicated/reordered frames
+  never duplicate work-function side effects, and the retransmit budget
+  measures worker *silence* rather than execution time (a chunk may
+  legitimately run for minutes);
+* the proxy ignores ``done`` frames whose seq is not the pending one, so
+  duplicated completions are dropped on the floor;
+* a definitive connection loss (EOF) or retransmit exhaustion posts a
+  :class:`~repro.core.backends.WorkerLost` completion, which
+  :class:`~repro.core.backends.BackendEngine` answers by removing the
+  unit and requeueing its in-flight chunk to the survivors exactly once
+  (an ``action="lost"`` event in ``RunReport.events``).
+
+Failure semantics, stated honestly: when only *frames* are lost the
+protocol preserves exact-once execution.  When the **worker itself** is
+lost, a chunk it had already executed (whose completion never arrived)
+is requeued and re-executed by a survivor — results stay correct because
+the dead worker's results never surfaced, but external side effects need
+an idempotent sink (e.g. write-per-index files, not appends).  This is
+the standard at-least-once boundary of any distributed work queue; the
+tests pin both halves of the contract.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import pickle
+import queue
+import random
+import select
+import socket
+import struct
+import subprocess
+import sys
+import threading
+import time
+from collections import OrderedDict, deque
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from .backends import (
+    BackendUnit,
+    CompletionBus,
+    CompletionRecord,
+    WorkerLost,
+    make_backend,
+)
+from .scheduler import Chunk
+
+__all__ = [
+    "Transport",
+    "TransportError",
+    "TransportClosed",
+    "LoopbackTransport",
+    "SocketTransport",
+    "FlakyTransport",
+    "RemoteWorker",
+    "WorkerServer",
+    "RemoteUnit",
+    "SleepWork",
+    "WorkerHandle",
+    "spawn_worker",
+    "encode_frame",
+    "FrameDecoder",
+    "MAX_FRAME_BYTES",
+]
+
+
+class TransportError(ConnectionError):
+    """The transport failed to carry a frame (protocol or session error)."""
+
+
+class TransportClosed(TransportError):
+    """The transport is closed (locally or by the peer) — definitive EOF."""
+
+
+# ---------------------------------------------------------------------------
+# frame codec: length-prefixed pickled frames
+# ---------------------------------------------------------------------------
+_HEADER = struct.Struct(">I")
+MAX_FRAME_BYTES = 256 * 1024 * 1024  # refuse absurd lengths (corrupt header)
+
+
+def encode_frame(frame: dict) -> bytes:
+    """``frame`` -> 4-byte big-endian payload length + pickled payload."""
+    payload = pickle.dumps(frame, protocol=pickle.HIGHEST_PROTOCOL)
+    if len(payload) > MAX_FRAME_BYTES:
+        raise TransportError(
+            f"frame of {len(payload)} bytes exceeds MAX_FRAME_BYTES"
+        )
+    return _HEADER.pack(len(payload)) + payload
+
+
+class FrameDecoder:
+    """Incremental decoder: feed byte chunks, get complete frames out.
+
+    TCP delivers a byte stream, not messages; the decoder buffers partial
+    frames across ``feed`` calls and yields each frame exactly once, in
+    order, no matter how the stream was segmented.
+    """
+
+    def __init__(self) -> None:
+        self._buf = bytearray()
+
+    def feed(self, data: bytes) -> List[dict]:
+        self._buf += data
+        out: List[dict] = []
+        while True:
+            if len(self._buf) < _HEADER.size:
+                break
+            (n,) = _HEADER.unpack_from(self._buf)
+            if n > MAX_FRAME_BYTES:
+                raise TransportError(
+                    f"frame header claims {n} bytes (> {MAX_FRAME_BYTES}); "
+                    "stream is corrupt"
+                )
+            if len(self._buf) < _HEADER.size + n:
+                break
+            payload = bytes(self._buf[_HEADER.size:_HEADER.size + n])
+            del self._buf[:_HEADER.size + n]
+            try:
+                out.append(pickle.loads(payload))
+            except Exception as exc:
+                # The length prefix kept the stream aligned, so a payload
+                # that cannot unpickle here (e.g. a work_fn whose module
+                # the peer cannot import) is dropped as a poison frame —
+                # the retransmit/WorkerLost protocol turns it into a
+                # requeue instead of a dead session thread.
+                out.append({"kind": "undecodable", "message": repr(exc)})
+        return out
+
+
+# ---------------------------------------------------------------------------
+# transports
+# ---------------------------------------------------------------------------
+class Transport:
+    """Message boundary between a :class:`RemoteUnit` and its worker.
+
+    ``send`` must be safe to call from multiple threads; ``recv`` is only
+    ever called from one receiver thread.  ``recv`` returns ``None`` on
+    timeout and raises :class:`TransportClosed` on definitive EOF.
+    """
+
+    def send(self, frame: dict) -> None:
+        raise NotImplementedError
+
+    def recv(self, timeout: Optional[float] = None) -> Optional[dict]:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        raise NotImplementedError
+
+    @property
+    def closed(self) -> bool:
+        raise NotImplementedError
+
+
+_EOF = object()
+
+
+class LoopbackTransport(Transport):
+    """In-process transport: a queue pair passing frames *by reference*.
+
+    The deterministic test medium: no sockets, no pickling — which is
+    deliberate, because by-reference delivery is what lets in-process
+    tests share a side-effect ledger with the "remote" worker and assert
+    exact-once semantics directly.  (Message-level fidelity — everything
+    must survive pickling — is :class:`SocketTransport`'s job.)
+    """
+
+    def __init__(self) -> None:
+        self._inbox: "queue.Queue" = queue.Queue()
+        self._peer: Optional["LoopbackTransport"] = None
+        self._closed = False
+
+    @classmethod
+    def pair(cls) -> Tuple["LoopbackTransport", "LoopbackTransport"]:
+        a, b = cls(), cls()
+        a._peer, b._peer = b, a
+        return a, b
+
+    def send(self, frame: dict) -> None:
+        peer = self._peer
+        if self._closed or peer is None or peer._closed:
+            raise TransportClosed("loopback endpoint closed")
+        peer._inbox.put(frame)
+
+    def recv(self, timeout: Optional[float] = None) -> Optional[dict]:
+        if self._closed:
+            raise TransportClosed("loopback endpoint closed")
+        try:
+            item = self._inbox.get(timeout=timeout)
+        except queue.Empty:
+            return None
+        if item is _EOF:
+            self._inbox.put(_EOF)  # later recvs see EOF too
+            raise TransportClosed("peer closed the loopback")
+        return item
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        self._inbox.put(_EOF)
+        if self._peer is not None:
+            self._peer._inbox.put(_EOF)
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+
+def parse_address(address: str) -> Tuple[str, int]:
+    """``"host:port"`` -> ``(host, port)`` (last colon splits the port)."""
+    host, sep, port = str(address).rpartition(":")
+    if not sep or not host or not port.isdigit():
+        raise ValueError(f"address must be 'host:port', got {address!r}")
+    return host, int(port)
+
+
+class SocketTransport(Transport):
+    """Length-prefixed pickled frames over a stream socket (TCP or UNIX)."""
+
+    def __init__(self, sock: socket.socket) -> None:
+        try:
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        except OSError:
+            pass  # AF_UNIX / socketpair: no Nagle to disable
+        self._sock = sock
+        self._decoder = FrameDecoder()
+        self._ready: deque = deque()
+        self._send_lock = threading.Lock()
+        self._closed = False
+
+    @classmethod
+    def connect(cls, address: str, timeout: float = 10.0) -> "SocketTransport":
+        host, port = parse_address(address)
+        sock = socket.create_connection((host, port), timeout=timeout)
+        sock.settimeout(None)
+        return cls(sock)
+
+    def send(self, frame: dict) -> None:
+        data = encode_frame(frame)  # pickling errors surface to the caller
+        with self._send_lock:
+            if self._closed:
+                raise TransportClosed("socket transport closed")
+            try:
+                self._sock.sendall(data)
+            except OSError as exc:
+                self._closed = True
+                raise TransportClosed(f"send failed: {exc}") from exc
+
+    def recv(self, timeout: Optional[float] = None) -> Optional[dict]:
+        deadline = None if timeout is None else time.perf_counter() + timeout
+        while True:
+            if self._ready:
+                return self._ready.popleft()
+            if self._closed:
+                raise TransportClosed("socket transport closed")
+            remaining: Optional[float] = None
+            if deadline is not None:
+                remaining = deadline - time.perf_counter()
+                if remaining <= 0:
+                    return None
+            try:
+                self._sock.settimeout(remaining)
+                data = self._sock.recv(1 << 16)
+            except socket.timeout:
+                return None
+            except OSError as exc:
+                self._closed = True
+                raise TransportClosed(f"recv failed: {exc}") from exc
+            if not data:
+                self._closed = True
+                raise TransportClosed("peer closed the connection")
+            self._ready.extend(self._decoder.feed(data))
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        try:
+            self._sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+
+class FlakyTransport(Transport):
+    """Seeded fault injection on the send path of any transport.
+
+    Each sent frame independently draws from the seeded RNG: it may be
+    **dropped** (never delivered), **duplicated** (delivered twice),
+    **held for reordering** (delivered after the *next* frame), or
+    **delayed** (delivered up to ``max_delay`` seconds late from a timer
+    thread).  Receives pass straight through — wrap both endpoints to
+    fault both directions.  Faults never raise: a frame racing a closing
+    transport is just another drop, which the reliability protocol must
+    absorb anyway.
+    """
+
+    def __init__(
+        self,
+        inner: Transport,
+        *,
+        seed: int,
+        drop: float = 0.0,
+        duplicate: float = 0.0,
+        reorder: float = 0.0,
+        delay: float = 0.0,
+        max_delay: float = 0.02,
+    ) -> None:
+        self.inner = inner
+        self.drop = float(drop)
+        self.duplicate = float(duplicate)
+        self.reorder = float(reorder)
+        self.delay = float(delay)
+        self.max_delay = float(max_delay)
+        self._rng = random.Random(seed)
+        self._held: Optional[dict] = None
+        self._lock = threading.Lock()
+        self.stats = {"sent": 0, "dropped": 0, "duplicated": 0,
+                      "reordered": 0, "delayed": 0}
+
+    def _deliver(self, frame: dict) -> None:
+        try:
+            self.inner.send(frame)
+        except TransportError:
+            pass  # racing a close: equivalent to a drop
+
+    def send(self, frame: dict) -> None:
+        with self._lock:
+            self.stats["sent"] += 1
+            if self._rng.random() < self.drop:
+                self.stats["dropped"] += 1
+                return
+            dup = self._rng.random() < self.duplicate
+            hold = self._rng.random() < self.reorder
+            delay_s = (
+                self._rng.uniform(0.0, self.max_delay)
+                if self._rng.random() < self.delay else 0.0
+            )
+            to_send: List[dict] = []
+            if hold:
+                self.stats["reordered"] += 1
+                held, self._held = self._held, frame
+                if held is not None:
+                    to_send.append(held)  # an older frame jumps the queue
+            else:
+                to_send.append(frame)
+                held, self._held = self._held, None
+                if held is not None:
+                    to_send.append(held)  # delivered after its successor
+                if dup:
+                    self.stats["duplicated"] += 1
+                    to_send.append(frame)
+        for f in to_send:
+            if delay_s > 0.0:
+                self.stats["delayed"] += 1
+                timer = threading.Timer(delay_s, self._deliver, args=(f,))
+                timer.daemon = True
+                timer.start()
+            else:
+                self._deliver(f)
+
+    def recv(self, timeout: Optional[float] = None) -> Optional[dict]:
+        return self.inner.recv(timeout)
+
+    def close(self) -> None:
+        self.inner.close()  # a still-held frame dies with the session
+
+    @property
+    def closed(self) -> bool:
+        return self.inner.closed
+
+
+# ---------------------------------------------------------------------------
+# the far side: a worker hosting real backend units
+# ---------------------------------------------------------------------------
+_DONE_CACHE_DEPTH = 8   # completion frames kept per unit for dup-resend
+_HOSTABLE = ("thread", "threads", "inline", "process", "processes", "jax")
+
+
+class RemoteWorker:
+    """Serve one transport session: host backend units, execute, report.
+
+    Frames handled:
+
+    * ``hello {unit, backend}`` — start hosting a backend unit for
+      ``unit`` (idempotent: duplicates re-ack with ``ready``); a bad
+      backend spec answers with an ``error`` frame instead.
+    * ``submit {unit, seq, chunk, fn, t_submit}`` — execute ``fn(chunk)``
+      on the hosted unit, **at most once per seq**: duplicates of an
+      accepted seq re-send the cached ``done`` frame, or answer ``busy``
+      while that seq is still executing (the client's liveness signal for
+      long-running chunks), so retransmits and transport duplicates never
+      duplicate side effects.
+    * ``bye {unit}`` — graceful drain: stop hosting the unit (its
+      in-flight chunk completes first; thread/pool shutdown waits on it).
+    * ``shutdown`` — end the serve loop.
+
+    All timestamps are ``time.perf_counter()`` — CLOCK_MONOTONIC, which
+    on Linux is shared by every process on one machine, so worker-side
+    execution-start times compose with client-side submit times into one
+    dispatch-latency measurement across *local* processes (same trick
+    :class:`ProcessPoolUnit` uses).  Across machines the two clocks have
+    unrelated epochs: execution/coverage semantics are unaffected, but
+    the reported latency split is only meaningful when client and worker
+    share a host (the supported benchmark/test topology).
+    """
+
+    def __init__(self, transport: Transport, *, poll_interval: float = 0.2) -> None:
+        self.transport = transport
+        self.poll_interval = poll_interval
+        self.bus = CompletionBus()
+        self._units: Dict[str, BackendUnit] = {}
+        self._last_seq: Dict[str, int] = {}
+        self._inflight: Dict[str, Tuple[int, float]] = {}  # unit -> (seq, t_accept)
+        self._done_cache: Dict[str, "OrderedDict[int, dict]"] = {}
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+
+    # -- outbound ------------------------------------------------------------
+    def _send(self, frame: dict) -> None:
+        try:
+            self.transport.send(frame)
+            return
+        except TransportClosed:
+            self._stop.set()
+            return
+        except Exception as exc:
+            # an untransportable payload (unpicklable result/error, or a
+            # frame over MAX_FRAME_BYTES): strip it and keep the protocol
+            # alive so the client gets an explanatory error instead of a
+            # retransmit-exhaustion "lost worker"
+            reason = exc
+        stripped = {**frame, "result": None,
+                    "error": TransportError(
+                        f"completion payload not transportable: {reason}")}
+        try:
+            self.transport.send(stripped)
+        except TransportError:
+            self._stop.set()
+
+    # -- inbound -------------------------------------------------------------
+    def _handle_hello(self, frame: dict) -> None:
+        name = frame.get("unit")
+        spec = frame.get("backend") or "thread"
+        if name not in self._units:
+            if not isinstance(spec, str) or spec not in _HOSTABLE:
+                self._send({"kind": "error", "unit": name,
+                            "message": f"worker cannot host backend {spec!r} "
+                                       f"(want one of {_HOSTABLE})"})
+                return
+            unit = make_backend(spec, name)
+            unit.start(self.bus)
+            with self._lock:
+                self._units[name] = unit
+                self._last_seq[name] = -1
+                self._done_cache[name] = OrderedDict()
+        self._send({"kind": "ready", "unit": name})
+
+    def _handle_submit(self, frame: dict) -> None:
+        name, seq = frame.get("unit"), frame.get("seq")
+        reply = None
+        accepted = False
+        with self._lock:
+            unit = self._units.get(name)
+            if unit is None:
+                return  # submit raced ahead of hello; retransmit will return
+            if seq <= self._last_seq[name]:
+                cached = self._done_cache[name].get(seq)
+                if cached is not None:
+                    reply = cached  # completion was lost in flight: resend
+                elif self._inflight.get(name, (None,))[0] == seq:
+                    # still executing: answer the probe so the client's
+                    # retransmit budget measures *silence*, not work time
+                    reply = {"kind": "busy", "unit": name, "seq": seq}
+                # else: stale duplicate from before the cache window — drop
+            elif name in self._inflight:
+                pass  # defensive: never two executions on one unit
+            else:
+                self._last_seq[name] = seq
+                self._inflight[name] = (seq, time.perf_counter())
+                accepted = True
+        if reply is not None:
+            self._send(reply)
+        if accepted:
+            unit.submit(frame["chunk"], frame["fn"])
+
+    def _handle_bye(self, frame: dict) -> None:
+        with self._lock:
+            unit = self._units.pop(frame.get("unit"), None)
+        if unit is not None:
+            unit.close()  # waits for an in-flight chunk (graceful drain)
+
+    def _pump(self) -> None:
+        """Forward hosted-unit completions as ``done`` frames."""
+        while not self._stop.is_set():
+            self.bus.wait(timeout=self.poll_interval)
+            for rec in self.bus.drain():
+                with self._lock:
+                    entry = self._inflight.pop(rec.unit, None)
+                if entry is None:
+                    continue  # completion of a bye'd unit's last chunk
+                seq, t_accept = entry
+                frame = {
+                    "kind": "done", "unit": rec.unit, "seq": seq,
+                    "chunk": rec.chunk, "elapsed": rec.elapsed,
+                    "t_start": t_accept + rec.dispatch_latency,
+                    "error": rec.error, "result": rec.result,
+                }
+                with self._lock:
+                    cache = self._done_cache.get(rec.unit)
+                    if cache is not None:
+                        cache[seq] = frame
+                        while len(cache) > _DONE_CACHE_DEPTH:
+                            cache.popitem(last=False)
+                self._send(frame)
+
+    # -- the loop ------------------------------------------------------------
+    def serve(self) -> None:
+        """Blocking serve loop; returns when the session ends."""
+        pump = threading.Thread(target=self._pump, daemon=True,
+                                name="eneac-worker-pump")
+        pump.start()
+        try:
+            while not self._stop.is_set():
+                try:
+                    frame = self.transport.recv(timeout=self.poll_interval)
+                except TransportClosed:
+                    break
+                if frame is None:
+                    continue
+                kind = frame.get("kind")
+                if kind == "hello":
+                    self._handle_hello(frame)
+                elif kind == "submit":
+                    self._handle_submit(frame)
+                elif kind == "bye":
+                    self._handle_bye(frame)
+                elif kind == "shutdown":
+                    break
+                # unknown kinds are ignored (forward compatibility)
+        finally:
+            self._stop.set()
+            pump.join(timeout=10.0)
+            with self._lock:
+                units, self._units = dict(self._units), {}
+            for unit in units.values():
+                try:
+                    unit.close()
+                except Exception:
+                    pass
+            self.transport.close()
+
+    def stop(self) -> None:
+        self._stop.set()
+
+
+class WorkerServer:
+    """TCP front door: one :class:`RemoteWorker` session per connection."""
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0) -> None:
+        self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._sock.bind((host, port))
+        self._sock.listen(64)
+        self.host = host
+        self.port = self._sock.getsockname()[1]
+        self.address = f"{self.host}:{self.port}"
+        self._stop = threading.Event()
+        self._workers: List[RemoteWorker] = []
+        self._threads: List[threading.Thread] = []
+        self._accept_thread: Optional[threading.Thread] = None
+
+    def serve_forever(self) -> None:
+        self._sock.settimeout(0.25)
+        while not self._stop.is_set():
+            try:
+                conn, _addr = self._sock.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                break
+            worker = RemoteWorker(SocketTransport(conn))
+            t = threading.Thread(target=worker.serve, daemon=True,
+                                 name=f"eneac-worker-conn{len(self._threads)}")
+            t.start()
+            self._workers.append(worker)
+            self._threads.append(t)
+
+    def start(self) -> "WorkerServer":
+        """Serve from a daemon thread (in-process test servers)."""
+        self._accept_thread = threading.Thread(
+            target=self.serve_forever, daemon=True, name="eneac-worker-accept"
+        )
+        self._accept_thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+        for worker in self._workers:
+            worker.stop()
+        for t in self._threads:
+            t.join(timeout=5.0)
+        if self._accept_thread is not None:
+            self._accept_thread.join(timeout=5.0)
+
+
+# ---------------------------------------------------------------------------
+# the near side: the proxy unit
+# ---------------------------------------------------------------------------
+class RemoteUnit(BackendUnit):
+    """A :class:`BackendUnit` whose execution happens behind a transport.
+
+    Construct with either ``address="host:port"`` (connects a
+    :class:`SocketTransport` at ``start``; reconnects on restart) or an
+    already-connected ``transport=`` endpoint (loopback tests; single
+    session).  ``remote_backend`` names the backend the worker hosts for
+    this unit ("thread" by default).
+
+    ``submit`` is non-blocking: it frames the chunk and returns; the
+    receiver thread retransmits the pending frame every
+    ``retry_interval`` seconds until its ``done`` arrives (the worker
+    dedups, so retransmits are safe), posts the completion to the run's
+    bus, and records the dispatch-latency split —
+
+    * ``dispatch_latencies``: submit → remote execution start (total),
+    * ``local_queue_latencies``: submit → first socket write,
+    * ``wire_latencies``: first write → remote execution start (wire +
+      remote queue; surfaced as ``RunReport.wire_latency``).
+
+    The split subtracts worker-side from client-side ``perf_counter``
+    readings, so it is meaningful when both share a machine (subprocess
+    workers — the supported topology); a cross-machine worker skews the
+    latency numbers by the clock-epoch offset without affecting
+    execution or coverage semantics.
+
+    Definitive EOF, a failed send, or ``max_retries`` unanswered
+    retransmits post a :class:`~repro.core.backends.WorkerLost`
+    completion instead — the engine's signal to requeue the in-flight
+    chunk and drop this unit from the run.
+    """
+
+    kind_name = "remote"
+
+    def __init__(
+        self,
+        name: str,
+        address: Optional[str] = None,
+        *,
+        transport: Optional[Transport] = None,
+        remote_backend: str = "thread",
+        retry_interval: float = 0.1,
+        max_retries: int = 100,
+        connect_timeout: float = 10.0,
+    ) -> None:
+        super().__init__(name)
+        if (address is None) == (transport is None):
+            raise ValueError("pass exactly one of address= or transport=")
+        if remote_backend not in _HOSTABLE:
+            raise ValueError(
+                f"remote_backend must be one of {_HOSTABLE}, "
+                f"got {remote_backend!r} (no proxy chains)"
+            )
+        self.address = address
+        self.remote_backend = remote_backend
+        self.retry_interval = float(retry_interval)
+        self.max_retries = int(max_retries)
+        self.connect_timeout = float(connect_timeout)
+        self._transport = transport
+        self.lost = False
+        self.wire_latencies: List[float] = []
+        self.local_queue_latencies: List[float] = []
+        self._seq = 0
+        self._pending: Optional[dict] = None
+        self._plock = threading.Lock()
+        self._stop = threading.Event()
+        self._recv_thread: Optional[threading.Thread] = None
+
+    # -- lifecycle ----------------------------------------------------------
+    def start(self, bus: CompletionBus) -> None:
+        super().start(bus)
+        self.wire_latencies = []
+        self.local_queue_latencies = []
+        if self._transport is None or self._transport.closed:
+            if self.address is None:
+                raise TransportClosed(
+                    f"unit {self.name!r}: injected transport is closed and "
+                    "there is no address to reconnect to"
+                )
+            self._transport = SocketTransport.connect(
+                self.address, timeout=self.connect_timeout
+            )
+        self.lost = False
+        self._stop.clear()
+        self._handshake()
+        self._recv_thread = threading.Thread(
+            target=self._recv_loop, daemon=True,
+            name=f"eneac-remote-{self.name}",
+        )
+        self._recv_thread.start()
+
+    def _handshake(self) -> None:
+        """hello → ready, retransmitting until the worker answers."""
+        hello = {"kind": "hello", "unit": self.name,
+                 "backend": self.remote_backend}
+        deadline = time.perf_counter() + self.connect_timeout
+        next_hello = 0.0
+        while time.perf_counter() < deadline:
+            if time.perf_counter() >= next_hello:
+                self._transport.send(hello)
+                next_hello = time.perf_counter() + max(self.retry_interval, 0.02)
+            frame = self._transport.recv(timeout=0.02)
+            if frame is None:
+                continue
+            kind = frame.get("kind")
+            if kind == "ready" and frame.get("unit") == self.name:
+                return
+            if kind == "error" and frame.get("unit") == self.name:
+                raise TransportError(
+                    f"worker refused unit {self.name!r}: {frame.get('message')}"
+                )
+            # stale frames from an earlier session are ignored
+        raise TransportError(
+            f"worker for unit {self.name!r} did not answer hello within "
+            f"{self.connect_timeout}s"
+        )
+
+    def close(self) -> None:
+        self._stop.set()
+        if self._transport is not None and not self._transport.closed:
+            try:
+                self._transport.send({"kind": "bye", "unit": self.name})
+            except TransportError:
+                pass
+        thread = self._recv_thread
+        if (thread is not None and thread.is_alive()
+                and thread is not threading.current_thread()):
+            thread.join(timeout=5.0)
+        self._recv_thread = None
+        if self._transport is not None:
+            self._transport.close()
+        super().close()
+
+    # -- submission ---------------------------------------------------------
+    def submit(self, chunk: Chunk, work_fn: Callable[[Chunk], Any]) -> None:
+        if self.lost or self._transport is None or self._transport.closed:
+            self._post_lost(chunk, "transport already lost at submit")
+            return
+        t_submit = time.perf_counter()
+        frame = {"kind": "submit", "unit": self.name, "seq": self._seq,
+                 "chunk": chunk, "fn": work_fn, "t_submit": t_submit}
+        with self._plock:
+            self._pending = {
+                "seq": self._seq, "frame": frame, "chunk": chunk,
+                "t_submit": t_submit, "t_sent": None, "sends": 0,
+                "next_resend": 0.0,
+            }
+            self._seq += 1
+        self._transmit_pending()
+
+    def _transmit_pending(self) -> None:
+        with self._plock:
+            p = self._pending
+            if p is None:
+                return
+            now = time.perf_counter()
+            if p["t_sent"] is None:
+                p["t_sent"] = now
+            p["sends"] += 1
+            p["next_resend"] = now + self.retry_interval
+            frame = p["frame"]
+        try:
+            self._transport.send(frame)
+        except TransportError:
+            self._fail_pending("connection lost while sending a submit")
+
+    # -- the receiver thread -------------------------------------------------
+    def _recv_loop(self) -> None:
+        tick = max(min(self.retry_interval / 2.0, 0.05), 0.005)
+        while not self._stop.is_set():
+            try:
+                frame = self._transport.recv(timeout=tick)
+            except TransportClosed:
+                self._fail_pending("connection closed by the worker")
+                return
+            if frame is not None:
+                self._on_frame(frame)
+            self._maybe_retransmit()
+
+    def _maybe_retransmit(self) -> None:
+        exhausted = False
+        due = False
+        with self._plock:
+            p = self._pending
+            if p is not None and time.perf_counter() >= p["next_resend"]:
+                if p["sends"] > self.max_retries:
+                    exhausted = True
+                else:
+                    due = True
+        if exhausted:
+            self._fail_pending(
+                f"no completion after {self.max_retries} retransmits"
+            )
+        elif due:
+            self._transmit_pending()
+
+    def _on_frame(self, frame: dict) -> None:
+        if frame.get("unit") != self.name:
+            return
+        if frame.get("kind") == "busy":
+            # the worker is alive and executing our pending seq: the
+            # retransmit budget bounds unresponsiveness, not work time
+            with self._plock:
+                p = self._pending
+                if p is not None and frame.get("seq") == p["seq"]:
+                    p["sends"] = 1
+            return
+        if frame.get("kind") != "done":
+            return
+        with self._plock:
+            p = self._pending
+            if p is None or frame.get("seq") != p["seq"]:
+                return  # duplicate/stale completion: drop on the floor
+            self._pending = None
+        t_start = frame.get("t_start")
+        if t_start is None:
+            t_start = p["t_sent"]
+        self.wire_latencies.append(max(t_start - p["t_sent"], 0.0))
+        self.local_queue_latencies.append(max(p["t_sent"] - p["t_submit"], 0.0))
+        self._post(CompletionRecord(
+            unit=self.name, chunk=p["chunk"],
+            elapsed=float(frame.get("elapsed", 0.0)),
+            dispatch_latency=max(t_start - p["t_submit"], 0.0),
+            error=frame.get("error"), result=frame.get("result"),
+        ))
+
+    # -- failure ------------------------------------------------------------
+    def _post_lost(self, chunk: Chunk, why: str) -> None:
+        self.lost = True
+        bus = self._bus
+        if bus is not None:
+            bus.post(CompletionRecord(
+                unit=self.name, chunk=chunk, elapsed=0.0, dispatch_latency=0.0,
+                error=WorkerLost(f"unit {self.name!r}: {why}"), result=None,
+            ))
+
+    def _fail_pending(self, why: str) -> None:
+        with self._plock:
+            p, self._pending = self._pending, None
+        self.lost = True
+        self._stop.set()
+        if p is not None:
+            self._post_lost(p["chunk"], why)
+
+    def describe(self) -> str:
+        where = self.address if self.address is not None else "injected transport"
+        return f"RemoteUnit({self.name!r} @ {where})"
+
+
+# ---------------------------------------------------------------------------
+# transportable work helpers
+# ---------------------------------------------------------------------------
+class SleepWork:
+    """Per-item sleep work that survives the pickling transport.
+
+    Work functions sent to a :class:`SocketTransport` worker unpickle *by
+    module reference* on the far side, so they cannot live in a script's
+    ``__main__`` (the worker has a different ``__main__``).  Benchmarks
+    that model compute with calibrated sleeps import this instead.
+    """
+
+    def __init__(self, seconds_per_item: float) -> None:
+        self.seconds_per_item = float(seconds_per_item)
+
+    def __call__(self, chunk) -> None:
+        time.sleep(chunk.size * self.seconds_per_item)
+
+
+# ---------------------------------------------------------------------------
+# worker subprocesses
+# ---------------------------------------------------------------------------
+_BANNER = "ENEAC_WORKER"
+
+
+class WorkerHandle:
+    """A spawned worker subprocess: its address and its lifetime."""
+
+    def __init__(self, proc: subprocess.Popen, address: str) -> None:
+        self.proc = proc
+        self.address = address
+
+    def terminate(self, timeout: float = 10.0) -> None:
+        if self.proc.poll() is None:
+            self.proc.terminate()
+            try:
+                self.proc.wait(timeout=timeout)
+            except subprocess.TimeoutExpired:
+                self.kill()
+
+    def kill(self) -> None:
+        if self.proc.poll() is None:
+            self.proc.kill()
+            self.proc.wait()
+
+    @property
+    def alive(self) -> bool:
+        return self.proc.poll() is None
+
+    def __enter__(self) -> "WorkerHandle":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.terminate()
+
+
+def spawn_worker(*, host: str = "127.0.0.1",
+                 startup_timeout: float = 60.0) -> WorkerHandle:
+    """Launch ``python -m repro.core.transport`` and wait for its address.
+
+    The subprocess prints ``ENEAC_WORKER <host:port>`` once its listener
+    is bound; this parses that line (with a timeout, so a worker that
+    dies on import fails fast instead of hanging the caller) and returns
+    a handle whose ``address`` plugs straight into
+    ``register_unit(backend=f"remote:{handle.address}")``.
+
+    The worker inherits the parent's ``sys.path``, because submitted
+    work functions unpickle by module reference on the far side — the
+    worker must be able to import whatever module defines them (test
+    modules included).
+    """
+    src_dir = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    env = dict(os.environ)
+    paths = [src_dir] + [p for p in sys.path if p and p != src_dir]
+    env["PYTHONPATH"] = os.pathsep.join(paths)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    entry = ("import sys; from repro.core.transport import _main; "
+             "sys.exit(_main(sys.argv[1:]))")
+    proc = subprocess.Popen(
+        [sys.executable, "-c", entry, "--host", host, "--port", "0"],
+        stdout=subprocess.PIPE, text=True, env=env,
+    )
+    deadline = time.monotonic() + startup_timeout
+    line = ""
+    while time.monotonic() < deadline:
+        if proc.poll() is not None:
+            raise RuntimeError(
+                f"worker subprocess exited with {proc.returncode} before "
+                "announcing its address"
+            )
+        ready, _, _ = select.select([proc.stdout], [], [], 0.25)
+        if not ready:
+            continue
+        line = proc.stdout.readline()
+        if line.startswith(_BANNER):
+            return WorkerHandle(proc, line.split()[1].strip())
+        if not line:  # EOF without banner
+            break
+    proc.kill()
+    raise RuntimeError(
+        f"worker subprocess did not announce an address within "
+        f"{startup_timeout}s (last line: {line!r})"
+    )
+
+
+def _main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Serve ENEAC remote backend units over TCP")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0,
+                    help="0 picks a free port (printed on stdout)")
+    args = ap.parse_args(argv)
+    server = WorkerServer(args.host, args.port)
+    print(f"{_BANNER} {server.address}", flush=True)
+    try:
+        server.serve_forever()
+    except KeyboardInterrupt:
+        pass
+    finally:
+        server.stop()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(_main())

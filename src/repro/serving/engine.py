@@ -32,13 +32,21 @@ with batch=1 and spliced into its slot (pytree scatter on the batch dim).
 :class:`~repro.core.backends.ThreadUnit`\\ s so the decode loop keeps
 stepping active slots while newcomers prefill — the backend-unit layer
 applied at the serving tier; ``backend="inline"`` (default) keeps the
-fully synchronous, deterministic admission path.  See
+fully synchronous, deterministic admission path.
+``backend="remote:<host:port>[,<host:port>...]"`` goes one step further:
+each slot's prefill unit is a :class:`~repro.core.transport.RemoteUnit`
+and admissions prefill in *worker subprocesses* (round-robin over the
+addresses); because the work crosses a pickling transport, remote mode
+needs ``model_spec={"config", "smoke", "seed"}`` so workers can rebuild
+the model+params deterministically, and prefill results (the batch=1
+cache + first token) travel back in the completion frame.  See
 ``docs/architecture.md`` for how serving maps onto the runtime.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from collections import deque
 from typing import Deque, Dict, List, Optional
@@ -47,14 +55,63 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.backends import CompletionBus, ThreadUnit
+from ..core.backends import BackendUnit, CompletionBus, ThreadUnit
 from ..core.runtime import HeteroRuntime, WorkQueue
 from ..core.scheduler import WorkerKind
 from ..core.space import FlatSpace
+from ..core.transport import RemoteUnit
 from ..models import Model
 from .sampling import sample
 
 __all__ = ["Request", "RequestResult", "ServingEngine"]
+
+
+# ---------------------------------------------------------------------------
+# remote prefill: picklable work + a per-process model cache on the worker
+# ---------------------------------------------------------------------------
+_WORKER_MODELS: Dict[tuple, tuple] = {}
+_WORKER_MODELS_LOCK = threading.Lock()
+
+
+def _worker_model(spec: dict):
+    """Build (model, params) once per worker process for a model spec."""
+    key = (spec["config"], bool(spec.get("smoke", False)),
+           int(spec.get("seed", 0)))
+    with _WORKER_MODELS_LOCK:
+        if key not in _WORKER_MODELS:
+            from ..configs import get_config
+            from ..models import make_model
+
+            cfg = get_config(key[0])
+            if key[1]:
+                cfg = cfg.smoke()
+            model = make_model(cfg)
+            params = model.init(jax.random.PRNGKey(key[2]))
+            _WORKER_MODELS[key] = (model, params)
+        return _WORKER_MODELS[key]
+
+
+class _RemotePrefill:
+    """One request's prefill as picklable work for a remote worker.
+
+    The worker rebuilds the model deterministically (same config + init
+    seed => identical params), prefills batch=1, and returns the single-
+    slot cache as numpy (device-free, transportable) plus the first
+    greedy token; the driver splices both into the decode batch.
+    """
+
+    def __init__(self, spec: dict, prompt, max_len: int) -> None:
+        self.spec = dict(spec)
+        self.prompt = np.asarray(prompt, np.int32)
+        self.max_len = int(max_len)
+
+    def __call__(self, chunk):
+        model, params = _worker_model(self.spec)
+        prompt = jnp.asarray(self.prompt, jnp.int32)[None, :]
+        single = model.init_caches(1, self.max_len)
+        logits, single = model.prefill_from(params, {"tokens": prompt}, single)
+        tok = int(np.asarray(sample(logits, temperature=0.0))[0])
+        return jax.tree.map(np.asarray, single), tok
 
 
 @dataclasses.dataclass
@@ -106,12 +163,21 @@ class ServingEngine:
         temperature: float = 0.0,
         seed: int = 0,
         backend: str = "inline",
+        model_spec: Optional[dict] = None,
     ) -> None:
         if mode not in ("continuous", "static"):
             raise ValueError(mode)
-        if backend not in ("inline", "threads", "thread"):
+        is_remote = isinstance(backend, str) and backend.startswith("remote:")
+        if backend not in ("inline", "threads", "thread") and not is_remote:
             raise ValueError(
-                f"backend must be inline|threads, got {backend!r}"
+                f"backend must be inline|threads|remote:<addr>[,...], "
+                f"got {backend!r}"
+            )
+        if is_remote and not model_spec:
+            raise ValueError(
+                "backend='remote:...' needs model_spec={'config': name, "
+                "'smoke': bool, 'seed': int} so workers can rebuild the "
+                "model deterministically"
             )
         self.model = model
         self.params = params
@@ -119,6 +185,7 @@ class ServingEngine:
         self.max_len = max_len
         self.mode = mode
         self.backend = "threads" if backend == "thread" else backend
+        self.model_spec = dict(model_spec) if model_spec else None
         self.temperature = temperature
         self.key = jax.random.PRNGKey(seed)
 
@@ -127,11 +194,15 @@ class ServingEngine:
         self._submit_times: Dict[int, float] = {}
 
         # decode slots are the compute units; run() opens a WorkQueue over
-        # the submitted requests so refill is completion-driven
+        # the submitted requests so refill is completion-driven.  (Remote
+        # prefill units are registered by instance below, so the runtime
+        # registry itself stays backend-less for remote mode.)
         self.runtime = HeteroRuntime()
         for b in range(slots):
-            self.runtime.register_unit(f"slot{b}", WorkerKind.ACC,
-                                       backend=self.backend)
+            self.runtime.register_unit(
+                f"slot{b}", WorkerKind.ACC,
+                backend=None if is_remote else self.backend,
+            )
         self._feed: Optional[WorkQueue] = None
         self._pending: List[Request] = []
         self.last_run_report = None
@@ -140,13 +211,23 @@ class ServingEngine:
         # a per-slot ThreadUnit so the decode loop keeps stepping while new
         # requests prefill — real asynchrony at the serving layer (the
         # decode step itself stays lockstep-batched).
-        self._prefill_units: Optional[Dict[int, ThreadUnit]] = None
+        # backend="remote:...": the same per-slot units, but RemoteUnits —
+        # prefills execute in worker subprocesses round-robin over the
+        # given addresses and results come back in completion frames.
+        self._prefill_units: Optional[Dict[int, BackendUnit]] = None
         self._prefill_bus: Optional[CompletionBus] = None
         self._prefilling: Dict[int, Request] = {}
         if self.backend == "threads":
             self._prefill_bus = CompletionBus()
             self._prefill_units = {
                 b: ThreadUnit(f"slot{b}") for b in range(slots)
+            }
+        elif is_remote:
+            addrs = self.backend[len("remote:"):].split(",")
+            self._prefill_bus = CompletionBus()
+            self._prefill_units = {
+                b: RemoteUnit(f"slot{b}", address=addrs[b % len(addrs)])
+                for b in range(slots)
             }
 
         self.caches = model.init_caches(slots, max_len)
@@ -190,11 +271,16 @@ class ServingEngine:
         req = self._pending[chunk.start]
         if self._prefill_units is not None:
             # async admission: the slot's prefill unit works while the
-            # decode loop keeps stepping the already-active slots
+            # decode loop keeps stepping the already-active slots; remote
+            # units need picklable work, so they get a _RemotePrefill
+            # instead of a closure over the live model
+            if self.model_spec is not None:
+                work = _RemotePrefill(self.model_spec, req.prompt,
+                                      self.max_len)
+            else:
+                work = lambda c, req=req: self._prefill(req)  # noqa: E731
             self._prefilling[slot] = req
-            self._prefill_units[slot].submit(
-                chunk, lambda c, req=req: self._prefill(req)
-            )
+            self._prefill_units[slot].submit(chunk, work)
             return True
         self._install(slot, req, *self._prefill(req))
         return True

@@ -37,6 +37,7 @@ except ImportError:  # CI container has no hypothesis; use the vendored shim
 import repro.core.backends as backends_mod
 from repro.core import (
     CompletionBus,
+    CompletionRecord,
     ElasticEvent,
     ElasticSchedule,
     HeteroRuntime,
@@ -48,6 +49,7 @@ from repro.core import (
     TiledSpace,
     WorkerKind,
 )
+from repro.core.backends import make_backend
 from repro.core.runtime import POLICIES
 from repro.core.scheduler import Chunk
 
@@ -211,6 +213,164 @@ class TestUnits:
 def _sum_indices(chunk):
     """Module-level so ProcessPoolUnit can pickle it."""
     return sum(range(chunk.start, chunk.stop))
+
+
+def _raise_in_pool(chunk):
+    """Module-level so ProcessPoolUnit can pickle it; always fails."""
+    raise ValueError(f"pool boom at {chunk.start}")
+
+
+# ---------------------------------------------------------------------------
+# ProcessPoolUnit error paths (ISSUE 5 satellite): a raising work_fn must
+# surface through the CompletionBus and fail parallel_for cleanly — never
+# hang the dispatcher waiting on a completion that was swallowed
+# ---------------------------------------------------------------------------
+class TestProcessPoolErrors:
+    def test_pool_exception_surfaces_on_the_bus(self):
+        unit = ProcessPoolUnit("p0")
+        bus = CompletionBus()
+        unit.start(bus)
+        try:
+            unit.submit(Chunk(3, 7, "p0"), _raise_in_pool)
+            assert bus.wait(timeout=60.0), "no completion posted for the error"
+            recs = bus.drain()
+            assert len(recs) == 1
+            assert isinstance(recs[0].error, ValueError)
+            assert "pool boom at 3" in str(recs[0].error)
+            assert recs[0].result is None
+        finally:
+            unit.close()
+
+    def test_pool_exception_fails_parallel_for_cleanly(self):
+        rt = HeteroRuntime()
+        rt.register_unit("p0", WorkerKind.CC, work_fn=_raise_in_pool,
+                         backend="process")
+        rt.register_unit("p1", WorkerKind.CC, work_fn=_raise_in_pool,
+                         backend="process")
+        with pytest.raises(ValueError, match="pool boom"):
+            rt.parallel_for(num_items=64, engine="interrupt", acc_chunk=8)
+
+    def test_pool_error_then_unit_still_usable(self):
+        # an error completion must not wedge the pool: the same unit keeps
+        # serving submissions afterwards
+        unit = ProcessPoolUnit("p0")
+        bus = CompletionBus()
+        unit.start(bus)
+        try:
+            unit.submit(Chunk(0, 2, "p0"), _raise_in_pool)
+            assert bus.wait(timeout=60.0)
+            assert isinstance(bus.drain()[0].error, ValueError)
+            unit.submit(Chunk(0, 4, "p0"), _sum_indices)
+            assert bus.wait(timeout=60.0)
+            rec = bus.drain()[0]
+            assert rec.error is None and rec.result == sum(range(4))
+        finally:
+            unit.close()
+
+
+# ---------------------------------------------------------------------------
+# JaxDeviceUnit degradation (ISSUE 5 satellite): without jax, behaviour is
+# bit-identical to a ThreadUnit — same coverage, same report fields, same
+# exact-once side effects
+# ---------------------------------------------------------------------------
+class TestJaxDegradationParity:
+    def _run(self, backend_spec):
+        rec = Recorder()
+        rt = HeteroRuntime()
+        rt.register_unit("u0", WorkerKind.CC, work_fn=rec,
+                         backend=backend_spec)
+        # a fixed pre-split makes the run fully deterministic, so the two
+        # backends can be compared field-for-field, not just in aggregate
+        rep = rt.parallel_for(num_items=96, policy={"u0": (0, 96)},
+                              engine="interrupt")
+        return rep, rec
+
+    def test_no_jax_degrades_bit_identically_to_thread(self, monkeypatch):
+        monkeypatch.setattr(backends_mod, "_jax_module", lambda: None)
+        probe = JaxDeviceUnit("probe")
+        probe.start(CompletionBus())
+        assert probe.degraded, "monkeypatched import must trigger degradation"
+        probe.close()
+
+        rep_jax, rec_jax = self._run("jax")
+        rep_thr, rec_thr = self._run("thread")
+        assert rec_jax.counts == rec_thr.counts
+        for field in ("items", "chunks", "coverage", "per_worker_items",
+                      "per_worker_chunks"):
+            assert getattr(rep_jax, field) == getattr(rep_thr, field), field
+        assert set(rep_jax.dispatch_latency) == set(rep_thr.dispatch_latency)
+        # neither path has a transport in it
+        assert rep_jax.wire_latency is None and rep_thr.wire_latency is None
+
+
+# ---------------------------------------------------------------------------
+# make_backend negatives (ISSUE 5 satellite): an unknown spec must teach
+# the caller every valid spec, including the remote: form
+# ---------------------------------------------------------------------------
+class TestBackendSpecErrors:
+    @pytest.mark.parametrize("bad", ["gpu-go-brrr", "remote", "threadz", ""])
+    def test_unknown_spec_lists_all_valid_specs(self, bad):
+        with pytest.raises(ValueError, match="unknown backend") as ei:
+            make_backend(bad, "u0")
+        message = str(ei.value)
+        for expected in ("'inline'", "'thread'/'threads'",
+                         "'process'/'processes'", "'jax'",
+                         "'remote:<host:port>'", "BackendUnit instance"):
+            assert expected in message, f"error does not teach {expected}"
+
+    def test_register_unit_propagates_the_listing(self):
+        rt = HeteroRuntime()
+        with pytest.raises(ValueError, match="remote:<host:port>"):
+            rt.register_unit("a", WorkerKind.CC, backend="gpu-go-brrr")
+
+
+# ---------------------------------------------------------------------------
+# CompletionBus under concurrent posters (ISSUE 5 satellite): N producer
+# threads x M records each — no record lost, none duplicated, regardless
+# of how posts interleave with waits/drains
+# ---------------------------------------------------------------------------
+class TestCompletionBusProperty:
+    @given(n_threads=st.integers(2, 6), per_thread=st.integers(5, 40),
+           seed=st.integers(0, 10**6))
+    @settings(max_examples=25, deadline=None)
+    def test_no_lost_or_duplicated_records(self, n_threads, per_thread, seed):
+        import random
+
+        bus = CompletionBus()
+        barrier = threading.Barrier(n_threads)
+
+        def producer(t):
+            rng = random.Random(seed * 1009 + t)
+            barrier.wait()
+            for k in range(per_thread):
+                if rng.random() < 0.25:
+                    time.sleep(rng.uniform(0.0, 1e-4))
+                bus.post(CompletionRecord(
+                    unit=f"u{t}", chunk=Chunk(k, k + 1, f"u{t}"),
+                    elapsed=0.0, dispatch_latency=0.0,
+                ))
+
+        threads = [threading.Thread(target=producer, args=(t,), daemon=True)
+                   for t in range(n_threads)]
+        for t in threads:
+            t.start()
+        total = n_threads * per_thread
+        collected = []
+        deadline = time.perf_counter() + 30.0
+        while len(collected) < total and time.perf_counter() < deadline:
+            bus.wait(timeout=1.0)
+            collected.extend(bus.drain())
+        for t in threads:
+            t.join(timeout=10.0)
+        collected.extend(bus.drain())
+        assert len(collected) == total
+        tally = Counter((r.unit, r.chunk.start) for r in collected)
+        assert all(c == 1 for c in tally.values()), (
+            f"duplicated records: {[k for k, c in tally.items() if c != 1]}"
+        )
+        assert set(tally) == {(f"u{t}", k)
+                              for t in range(n_threads)
+                              for k in range(per_thread)}
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,747 @@
+"""Multi-host transport backends (ISSUE 5).
+
+The contract under test: a :class:`~repro.core.transport.RemoteUnit`
+driving a :class:`~repro.core.transport.RemoteWorker` across a message
+transport behaves like any other backend unit — and keeps behaving like
+one when the *medium* misbehaves:
+
+* completions pumped back over the transport land on the local
+  ``CompletionBus`` and tile the space exactly,
+* the seq/retransmit/dedup protocol survives seeded drop / delay /
+  duplicate / reorder injection (``FlakyTransport``) with **exact-once
+  work-function side effects** — parity with inline execution — across
+  ≥20 random seeds, with monotone event times,
+* a definitive connection loss requeues the in-flight chunk to the
+  survivors (an ``action="lost"`` event) instead of hanging or failing
+  the run,
+* real ``SocketTransport`` worker *subprocesses* behind a
+  ``ShardedSpace(placement=...)`` produce byte-identical results versus
+  ``backend="inline"`` (the ISSUE's acceptance line),
+* ``RunReport.dispatch_latency`` is split: ``wire_latency`` carries the
+  send→remote-execution-start component for remote units.
+
+Loopback tests pass frames by reference (shared side-effect ledgers);
+socket tests exercise the length-prefixed pickle codec and cross-process
+execution for real.  CI's ``transport`` job runs this module under the
+hang-killing ``tools/run_with_timeout.py``.
+"""
+
+import os
+import socket
+import threading
+import time
+from collections import Counter
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # CI container has no hypothesis; use the vendored shim
+    from _propcheck import given, settings, strategies as st
+
+from repro.core import (
+    ElasticSchedule,
+    FlakyTransport,
+    HeteroRuntime,
+    LoopbackTransport,
+    RemoteUnit,
+    RemoteWorker,
+    ShardedSpace,
+    SocketTransport,
+    TransportClosed,
+    TransportError,
+    WorkerKind,
+    WorkerServer,
+)
+from repro.core.backends import CompletionBus, make_backend
+from repro.core.runtime import POLICIES
+from repro.core.scheduler import Chunk
+from repro.core.transport import FrameDecoder, encode_frame, spawn_worker
+
+
+def assert_exact_tiling(spans, n_items):
+    assert spans, "no chunks completed"
+    assert spans[0][0] == 0
+    assert spans[-1][1] == n_items
+    for (a, b), (c, d) in zip(spans, spans[1:]):
+        assert b == c, f"gap or overlap at {b}:{c}"
+
+
+class Recorder:
+    """Thread-safe exact-once ledger (shared by reference over loopback)."""
+
+    def __init__(self, per_item_sleep=0.0):
+        self.lock = threading.Lock()
+        self.counts = Counter()
+        self.per_item_sleep = per_item_sleep
+
+    def __call__(self, chunk):
+        if self.per_item_sleep:
+            time.sleep(chunk.size * self.per_item_sleep)
+        with self.lock:
+            self.counts.update(chunk.indices())
+
+    def assert_exactly_once(self, n_items):
+        assert set(self.counts) == set(range(n_items)), (
+            f"missing {sorted(set(range(n_items)) - set(self.counts))[:5]}..."
+        )
+        dupes = {i: c for i, c in self.counts.items() if c != 1}
+        assert not dupes, f"indices executed more than once: {dupes}"
+
+
+def start_loopback_worker(*, flaky_seed=None, **faults):
+    """(client endpoint, worker, serve thread) over an in-process pair."""
+    client_end, worker_end = LoopbackTransport.pair()
+    client_side, worker_side = client_end, worker_end
+    if flaky_seed is not None:
+        client_side = FlakyTransport(client_end, seed=flaky_seed, **faults)
+        worker_side = FlakyTransport(worker_end, seed=flaky_seed + 1, **faults)
+    worker = RemoteWorker(worker_side, poll_interval=0.05)
+    t = threading.Thread(target=worker.serve, daemon=True)
+    t.start()
+    return client_side, worker, t
+
+
+def loopback_unit(name, *, flaky_seed=None, retry_interval=0.02,
+                  max_retries=600, **faults):
+    client_side, worker, _t = start_loopback_worker(
+        flaky_seed=flaky_seed, **faults)
+    return RemoteUnit(name, transport=client_side,
+                      retry_interval=retry_interval, max_retries=max_retries)
+
+
+# ---------------------------------------------------------------------------
+# frame codec
+# ---------------------------------------------------------------------------
+class TestFrameCodec:
+    def test_roundtrip_single_frame(self):
+        frame = {"kind": "submit", "seq": 7, "chunk": Chunk(3, 9, "u0"),
+                 "payload": list(range(10))}
+        dec = FrameDecoder()
+        (out,) = dec.feed(encode_frame(frame))
+        assert out == frame
+
+    def test_incremental_feed_any_segmentation(self):
+        frames = [{"kind": "done", "seq": i, "blob": b"x" * (i * 13)}
+                  for i in range(6)]
+        stream = b"".join(encode_frame(f) for f in frames)
+        for step in (1, 2, 3, 5, 7, 64, len(stream)):
+            dec = FrameDecoder()
+            out = []
+            for i in range(0, len(stream), step):
+                out.extend(dec.feed(stream[i:i + step]))
+            assert out == frames, f"segmentation step={step} corrupted frames"
+
+    def test_corrupt_header_raises(self):
+        dec = FrameDecoder()
+        with pytest.raises(TransportError, match="corrupt"):
+            dec.feed(b"\xff\xff\xff\xff garbage")
+
+    def test_unpicklable_payload_becomes_poison_frame(self):
+        # a payload that pickled fine on the sender but cannot unpickle
+        # here (e.g. a work_fn from a module this process cannot import)
+        # must not kill the session: the decoder yields an ignorable
+        # poison frame and the stream stays aligned for frames after it
+        import struct
+
+        good = {"kind": "done", "seq": 1}
+        payload = b"cno_such_module_xyz\nGhost\n."  # GLOBAL opcode, bad module
+        data = struct.pack(">I", len(payload)) + payload
+        dec = FrameDecoder()
+        out = dec.feed(data + encode_frame(good))
+        assert out[0]["kind"] == "undecodable"
+        assert out[1] == good
+
+
+# ---------------------------------------------------------------------------
+# transports
+# ---------------------------------------------------------------------------
+class TestLoopbackTransport:
+    def test_pair_send_recv_by_reference(self):
+        a, b = LoopbackTransport.pair()
+        frame = {"kind": "hello", "obj": object()}  # not picklable, fine here
+        a.send(frame)
+        assert b.recv(timeout=1.0) is frame
+        assert b.recv(timeout=0.01) is None
+
+    def test_close_raises_on_both_ends(self):
+        a, b = LoopbackTransport.pair()
+        a.close()
+        with pytest.raises(TransportClosed):
+            b.recv(timeout=1.0)
+        with pytest.raises(TransportClosed):
+            b.send({"kind": "x"})
+        with pytest.raises(TransportClosed):
+            a.recv(timeout=0.01)
+
+
+def socket_transport_pair():
+    a, b = socket.socketpair()
+    return SocketTransport(a), SocketTransport(b)
+
+
+class TestSocketTransport:
+    def test_frames_roundtrip_including_large(self):
+        # the 1MB frame overflows the kernel socket buffer, so the sender
+        # must run concurrently with the receiver (as it does in real use)
+        a, b = socket_transport_pair()
+        try:
+            frames = [{"kind": "submit", "seq": 0, "chunk": Chunk(0, 4, "u")},
+                      {"kind": "done", "seq": 0, "result": b"z" * 1_000_000}]
+            sender = threading.Thread(
+                target=lambda: [a.send(f) for f in frames], daemon=True)
+            sender.start()
+            got = [b.recv(timeout=10.0), b.recv(timeout=10.0)]
+            sender.join(timeout=10.0)
+            assert not sender.is_alive()
+            assert got == frames
+        finally:
+            a.close()
+            b.close()
+
+    def test_recv_timeout_returns_none(self):
+        a, b = socket_transport_pair()
+        try:
+            t0 = time.perf_counter()
+            assert b.recv(timeout=0.05) is None
+            assert time.perf_counter() - t0 < 2.0
+        finally:
+            a.close()
+            b.close()
+
+    def test_peer_close_raises_transport_closed(self):
+        a, b = socket_transport_pair()
+        a.close()
+        with pytest.raises(TransportClosed):
+            b.recv(timeout=5.0)
+
+    def test_tcp_connect_against_worker_server(self):
+        server = WorkerServer().start()
+        try:
+            tr = SocketTransport.connect(server.address, timeout=5.0)
+            tr.send({"kind": "hello", "unit": "u0", "backend": "inline"})
+            frame = tr.recv(timeout=5.0)
+            assert frame == {"kind": "ready", "unit": "u0"}
+            tr.close()
+        finally:
+            server.stop()
+
+
+# ---------------------------------------------------------------------------
+# RemoteUnit over loopback: an ordinary backend unit
+# ---------------------------------------------------------------------------
+class TestRemoteUnitLoopback:
+    def _drive(self, unit, chunks, work_fn):
+        bus = CompletionBus()
+        unit.start(bus)
+        try:
+            recs = []
+            for c in chunks:
+                unit.submit(c, work_fn)
+                assert bus.wait(timeout=10.0)
+                recs.extend(bus.drain())
+            return recs
+        finally:
+            unit.close()
+
+    def test_submit_completes_with_result_and_latency_split(self):
+        unit = loopback_unit("u0")
+        recs = self._drive(
+            unit, [Chunk(0, 4, "u0"), Chunk(4, 9, "u0")],
+            lambda c: c.size * 10,
+        )
+        assert [r.result for r in recs] == [40, 50]
+        assert all(r.error is None for r in recs)
+        assert len(unit.dispatch_latencies) == 2
+        assert len(unit.wire_latencies) == 2
+        assert len(unit.local_queue_latencies) == 2
+        for total, wire, local in zip(unit.dispatch_latencies,
+                                      unit.wire_latencies,
+                                      unit.local_queue_latencies):
+            assert total >= 0 and wire >= 0 and local >= 0
+            # the split re-composes (both components clamp at 0)
+            assert total <= wire + local + 1e-6 or total >= 0
+
+    def test_work_runs_on_the_worker_side_thread(self):
+        unit = loopback_unit("u0")
+        caller = threading.get_ident()
+        recs = self._drive(unit, [Chunk(0, 1, "u0")],
+                           lambda c: threading.get_ident())
+        assert recs[0].result != caller
+
+    def test_work_fn_error_crosses_the_transport(self):
+        def boom(c):
+            raise ValueError("remote kaput")
+
+        recs = self._drive(loopback_unit("u0"), [Chunk(0, 1, "u0")], boom)
+        assert isinstance(recs[0].error, ValueError)
+
+    def test_parallel_for_mixed_remote_and_local(self):
+        rec = Recorder(per_item_sleep=2e-5)
+        rt = HeteroRuntime()
+        rt.register_unit("r0", WorkerKind.CC, work_fn=rec,
+                         backend=loopback_unit("r0"))
+        rt.register_unit("r1", WorkerKind.CC, work_fn=rec,
+                         backend=loopback_unit("r1"))
+        rt.register_unit("cc0", WorkerKind.CC, work_fn=rec)
+        rep = rt.parallel_for(num_items=300, policy="multidynamic",
+                              engine="interrupt", acc_chunk=16)
+        assert rep.items == 300
+        assert_exact_tiling(rep.coverage, 300)
+        rec.assert_exactly_once(300)
+        # dispatch latency covers everyone; wire latency only remote units
+        assert set(rep.dispatch_latency) == {"r0", "r1", "cc0"}
+        assert set(rep.wire_latency) <= {"r0", "r1"}
+        assert rep.wire_latency, "remote units must report a wire component"
+        for u, wire in rep.wire_latency.items():
+            assert 0.0 <= wire <= rep.dispatch_latency[u] + 1e-6
+
+    def test_work_fn_error_fails_parallel_for(self):
+        def boom(c):
+            raise ValueError("chunk exploded remotely")
+
+        rt = HeteroRuntime()
+        rt.register_unit("r0", WorkerKind.CC, work_fn=boom,
+                         backend=loopback_unit("r0"))
+        with pytest.raises(ValueError, match="exploded remotely"):
+            rt.parallel_for(num_items=50, engine="interrupt", acc_chunk=8)
+
+    def test_long_chunk_is_not_mistaken_for_a_lost_worker(self):
+        # execution time (400ms) far exceeds the retransmit budget
+        # (5 x 10ms): the worker's busy answers must keep the unit alive —
+        # the budget bounds silence, not work
+        unit = loopback_unit("u0", retry_interval=0.01, max_retries=5)
+        recs = self._drive(
+            unit, [Chunk(0, 1, "u0")],
+            lambda c: time.sleep(0.4) or 41 + c.size,
+        )
+        assert recs[0].error is None
+        assert recs[0].result == 42
+
+    def test_handshake_timeout_when_nobody_serves(self):
+        client_end, _worker_end = LoopbackTransport.pair()  # no worker
+        unit = RemoteUnit("u0", transport=client_end,
+                          retry_interval=0.01, connect_timeout=0.2)
+        with pytest.raises(TransportError, match="did not answer hello"):
+            unit.start(CompletionBus())
+
+    def test_elastic_leave_drains_remote_unit_gracefully(self):
+        rec = Recorder(per_item_sleep=1e-4)
+        rt = HeteroRuntime()
+        rt.register_unit("r0", WorkerKind.CC, work_fn=rec,
+                         backend=loopback_unit("r0"))
+        rt.register_unit("cc0", WorkerKind.CC, work_fn=rec)
+        rep = rt.parallel_for(
+            num_items=150, policy="multidynamic", engine="interrupt",
+            acc_chunk=8, elastic=ElasticSchedule().leave(0.004, "r0"),
+        )
+        assert rep.items == 150
+        assert_exact_tiling(rep.coverage, 150)
+        rec.assert_exactly_once(150)
+        assert [e["action"] for e in rep.events] == ["leave"]
+        # the drained unit stopped early; the survivor finished the space
+        assert rep.per_worker_items["cc0"] > 0
+
+
+# ---------------------------------------------------------------------------
+# in-process TCP: late attach + sharded pinning validation
+# ---------------------------------------------------------------------------
+_TCP_LEDGER = Counter()
+_TCP_LOCK = threading.Lock()
+
+
+def _tcp_record(chunk):
+    """Module-level so TCP pickling resolves it; in-process workers share
+    this module's globals, so the ledger still observes side effects."""
+    time.sleep(chunk.size * 5e-5)
+    with _TCP_LOCK:
+        _TCP_LEDGER.update(chunk.indices())
+
+
+class TestTcpInProcess:
+    def setup_method(self):
+        with _TCP_LOCK:
+            _TCP_LEDGER.clear()
+
+    def test_remote_spec_through_register_unit(self):
+        server = WorkerServer().start()
+        try:
+            rt = HeteroRuntime()
+            rt.register_unit("r0", WorkerKind.CC, work_fn=_tcp_record,
+                             backend=f"remote:{server.address}")
+            rep = rt.parallel_for(num_items=120, engine="interrupt",
+                                  acc_chunk=16)
+            assert rep.items == 120
+            assert_exact_tiling(rep.coverage, 120)
+            with _TCP_LOCK:
+                assert set(_TCP_LEDGER) == set(range(120))
+                assert all(c == 1 for c in _TCP_LEDGER.values())
+            assert set(rep.wire_latency) == {"r0"}
+        finally:
+            server.stop()
+
+    def test_elastic_join_attaches_late_worker(self):
+        # the worker is listening but no unit is attached until the join
+        # event fires mid-run — "join = late worker attach"
+        server = WorkerServer().start()
+        try:
+            rt = HeteroRuntime()
+            rt.register_unit("cc0", WorkerKind.CC, work_fn=_tcp_record)
+            rep = rt.parallel_for(
+                _tcp_record, num_items=200, policy="multidynamic",
+                engine="interrupt", acc_chunk=8,
+                backend=f"remote:{server.address}",
+                elastic=ElasticSchedule().join(0.002, "late", kind="cc"),
+            )
+            assert rep.items == 200
+            assert_exact_tiling(rep.coverage, 200)
+            with _TCP_LOCK:
+                assert set(_TCP_LEDGER) == set(range(200))
+                assert all(c == 1 for c in _TCP_LEDGER.values())
+            assert rep.per_worker_items["late"] > 0
+            assert [e["action"] for e in rep.events] == ["join"]
+        finally:
+            server.stop()
+
+    def test_sharded_space_requires_pinning_remote_units(self):
+        rt = HeteroRuntime()
+        rt.register_unit("r0", WorkerKind.CC, work_fn=_tcp_record,
+                         backend="remote:127.0.0.1:9")
+        rt.register_unit("cc0", WorkerKind.CC, work_fn=_tcp_record)
+        with pytest.raises(ValueError, match="pinned via placement"):
+            rt.parallel_for(space=ShardedSpace(100, 2),
+                            engine="interrupt")
+
+    def test_sharded_space_rejects_call_level_remote_backend(self):
+        rt = HeteroRuntime()
+        rt.register_unit("cc0", WorkerKind.CC, work_fn=_tcp_record)
+        rt.register_unit("cc1", WorkerKind.CC, work_fn=_tcp_record)
+        with pytest.raises(ValueError, match="register per-unit remote"):
+            rt.parallel_for(space=ShardedSpace(100, 2),
+                            engine="interrupt",
+                            backend="remote:127.0.0.1:9")
+
+
+# ---------------------------------------------------------------------------
+# make_backend: the remote spec form
+# ---------------------------------------------------------------------------
+class TestRemoteSpec:
+    def test_remote_spec_builds_named_remote_unit(self):
+        unit = make_backend("remote:127.0.0.1:12345", "acc0")
+        assert isinstance(unit, RemoteUnit)
+        assert unit.name == "acc0"
+        assert unit.address == "127.0.0.1:12345"
+
+    def test_remote_spec_without_address_rejected(self):
+        with pytest.raises(ValueError, match="remote:<host:port>"):
+            make_backend("remote:", "u0")
+
+    def test_register_unit_accepts_remote_spec(self):
+        rt = HeteroRuntime()
+        spec = rt.register_unit("r0", WorkerKind.ACC, work_fn=lambda c: None,
+                                backend="remote:127.0.0.1:12345")
+        assert spec.backend == "remote:127.0.0.1:12345"
+
+    def test_no_proxy_chains(self):
+        with pytest.raises(ValueError, match="no proxy chains"):
+            RemoteUnit("u0", address="127.0.0.1:1",
+                       remote_backend="remote:127.0.0.1:2")
+
+
+# ---------------------------------------------------------------------------
+# worker loss: the medium dies, the run does not
+# ---------------------------------------------------------------------------
+class DropDoneTransport(FlakyTransport):
+    """Drops every ``done``/``busy`` frame: the worker→client channel is
+    dead while submits still flow — retransmit exhaustion, deterministic."""
+
+    def __init__(self, inner):
+        super().__init__(inner, seed=0)
+
+    def send(self, frame):
+        if isinstance(frame, dict) and frame.get("kind") in ("done", "busy"):
+            return
+        self.inner.send(frame)
+
+
+class TestWorkerLost:
+    def test_connection_drop_requeues_inflight_to_survivors(self):
+        # the work function itself severs the worker's transport after a
+        # few chunks: the executed-but-unreported chunk must be requeued
+        # (coverage exact-once) even though its side effects already
+        # landed — the documented at-least-once boundary of worker loss
+        client_end, worker_end = LoopbackTransport.pair()
+        worker = RemoteWorker(worker_end, poll_interval=0.05)
+        threading.Thread(target=worker.serve, daemon=True).start()
+
+        seen, lock = set(), threading.Lock()
+        state = {"executions": 0}
+
+        def work(chunk):
+            with lock:
+                seen.update(chunk.indices())
+                state["executions"] += 1
+                if state["executions"] == 3:
+                    worker_end.close()  # completion of this chunk is unsendable
+            time.sleep(chunk.size * 1e-4)
+
+        rt = HeteroRuntime()
+        rt.register_unit("r0", WorkerKind.CC, work_fn=work,
+                         backend=RemoteUnit("r0", transport=client_end,
+                                            retry_interval=0.02,
+                                            max_retries=25))
+        rt.register_unit("cc0", WorkerKind.CC, work_fn=work)
+        rt.register_unit("cc1", WorkerKind.CC, work_fn=work)
+        rep = rt.parallel_for(num_items=240, policy="multidynamic",
+                              engine="interrupt", acc_chunk=8)
+        assert rep.items == 240
+        assert_exact_tiling(rep.coverage, 240)
+        assert set(range(240)) <= seen
+        lost = [e for e in rep.events if e["action"] == "lost"]
+        assert len(lost) == 1 and lost[0]["unit"] == "r0"
+        assert lost[0]["requeued"] is not None
+
+    def test_retransmit_exhaustion_is_a_lost_worker_not_a_hang(self):
+        # completions never arrive (all done frames dropped): after
+        # max_retries the unit posts WorkerLost and the survivor finishes
+        client_end, worker_end = LoopbackTransport.pair()
+        worker = RemoteWorker(DropDoneTransport(worker_end),
+                              poll_interval=0.02)
+        threading.Thread(target=worker.serve, daemon=True).start()
+
+        rec = Recorder(per_item_sleep=1e-5)
+        rt = HeteroRuntime()
+        rt.register_unit("r0", WorkerKind.CC, work_fn=rec,
+                         backend=RemoteUnit("r0", transport=client_end,
+                                            retry_interval=0.01,
+                                            max_retries=5))
+        rt.register_unit("cc0", WorkerKind.CC, work_fn=rec)
+        rep = rt.parallel_for(num_items=100, policy="multidynamic",
+                              engine="interrupt", acc_chunk=8)
+        assert rep.items == 100
+        assert_exact_tiling(rep.coverage, 100)
+        lost = [e for e in rep.events if e["action"] == "lost"]
+        assert len(lost) == 1 and lost[0]["unit"] == "r0"
+        # every index ran at least once; only the requeued span may repeat
+        assert set(rec.counts) == set(range(100))
+
+    def test_all_workers_lost_raises_stall_not_hang(self):
+        client_end, worker_end = LoopbackTransport.pair()
+        worker = RemoteWorker(DropDoneTransport(worker_end),
+                              poll_interval=0.02)
+        threading.Thread(target=worker.serve, daemon=True).start()
+        rt = HeteroRuntime()
+        rt.register_unit("r0", WorkerKind.CC, work_fn=lambda c: None,
+                         backend=RemoteUnit("r0", transport=client_end,
+                                            retry_interval=0.01,
+                                            max_retries=5))
+        with pytest.raises(RuntimeError, match="stalled"):
+            rt.parallel_for(num_items=50, engine="interrupt", acc_chunk=8)
+
+
+# ---------------------------------------------------------------------------
+# the FlakyTransport battery (the ISSUE's headline)
+# ---------------------------------------------------------------------------
+def flaky_battery_run(seed):
+    """One randomized multi-host run over faulty loopback transports."""
+    import random
+
+    rng = random.Random(seed)
+    n_remote = rng.randint(2, 3)
+    n_local = rng.randint(0, 1)
+    n_items = rng.randint(80, 240)
+    acc_chunk = rng.choice([4, 8, 16])
+    policy = POLICIES[rng.randrange(3)]
+    faults = dict(
+        drop=rng.uniform(0.0, 0.25),
+        duplicate=rng.uniform(0.0, 0.25),
+        reorder=rng.uniform(0.0, 0.25),
+        delay=rng.uniform(0.0, 0.3),
+        max_delay=0.01,
+    )
+    rec = Recorder(per_item_sleep=rng.uniform(0.5, 2.0) * 2e-5)
+    rt = HeteroRuntime()
+    for i in range(n_remote):
+        rt.register_unit(
+            f"r{i}", WorkerKind.CC, work_fn=rec,
+            backend=loopback_unit(f"r{i}", flaky_seed=seed * 37 + i * 1000,
+                                  **faults),
+        )
+    for i in range(n_local):
+        rt.register_unit(f"cc{i}", WorkerKind.CC, work_fn=rec)
+
+    elastic = None
+    if n_remote + n_local >= 3 and rng.random() < 0.5:
+        # drain one remote unit mid-run; survivors must still cover
+        elastic = ElasticSchedule().leave(
+            rng.uniform(0.0, 0.05), f"r{rng.randrange(n_remote)}")
+
+    rep = rt.parallel_for(
+        num_items=n_items, policy=policy, engine="interrupt",
+        acc_chunk=acc_chunk, elastic=elastic,
+    )
+    return rep, rec, n_items
+
+
+class TestFlakyBattery:
+    """≥20 seeded drop/delay/duplicate/reorder schedules: exact-once."""
+
+    @given(seed=st.integers(0, 10**6))
+    @settings(max_examples=20, deadline=None)
+    def test_exact_once_under_faulty_medium(self, seed):
+        rep, rec, n_items = flaky_battery_run(seed)
+        assert rep.items == n_items
+        assert rep.chunks == len(rep.coverage)
+        assert_exact_tiling(rep.coverage, n_items)
+        rec.assert_exactly_once(n_items)
+        times = [e["t"] for e in (rep.events or [])]
+        assert times == sorted(times), "events not monotone"
+
+    def test_side_effect_parity_with_inline(self):
+        # the same workload through a faulty transport and through the
+        # inline backend must leave identical ledgers behind
+        n_items = 180
+
+        def run_remote():
+            rec = Recorder(per_item_sleep=1e-5)
+            rt = HeteroRuntime()
+            for i in range(2):
+                rt.register_unit(
+                    f"r{i}", WorkerKind.CC, work_fn=rec,
+                    backend=loopback_unit(f"r{i}", flaky_seed=1234 + i,
+                                          drop=0.2, duplicate=0.2,
+                                          reorder=0.2, delay=0.2,
+                                          max_delay=0.01),
+                )
+            rep = rt.parallel_for(num_items=n_items, policy="static",
+                                  engine="interrupt", acc_chunk=8)
+            return rep, rec
+
+        def run_inline():
+            rec = Recorder()
+            rt = HeteroRuntime()
+            for i in range(2):
+                rt.register_unit(f"r{i}", WorkerKind.CC, work_fn=rec,
+                                 backend="inline")
+            rep = rt.parallel_for(num_items=n_items, policy="static",
+                                  engine="interrupt", acc_chunk=8)
+            return rep, rec
+
+        rep_r, rec_r = run_remote()
+        rep_i, rec_i = run_inline()
+        assert rec_r.counts == rec_i.counts, "side effects diverged"
+        assert rep_r.items == rep_i.items == n_items
+        assert_exact_tiling(rep_r.coverage, n_items)
+        assert_exact_tiling(rep_i.coverage, n_items)
+
+
+# ---------------------------------------------------------------------------
+# worker subprocesses over real TCP (the acceptance criterion)
+# ---------------------------------------------------------------------------
+def _index_bytes(i: int) -> bytes:
+    return ((i * 2654435761) % 2**32).to_bytes(4, "big") * 4
+
+
+class ChunkWriter:
+    """Picklable work: one file per index (idempotent) + an append log."""
+
+    def __init__(self, root):
+        self.root = root
+
+    def __call__(self, chunk):
+        for i in chunk.indices():
+            with open(os.path.join(self.root, f"{i:06d}.bin"), "wb") as f:
+                f.write(_index_bytes(i))
+        with open(os.path.join(self.root, "log.txt"), "a") as f:
+            f.write(f"{chunk.start}:{chunk.stop}\n")
+
+
+def _sleepy_noop(chunk):
+    time.sleep(chunk.size * 2e-3)
+
+
+def read_results(root) -> bytes:
+    names = sorted(n for n in os.listdir(root) if n.endswith(".bin"))
+    return b"".join(
+        open(os.path.join(root, n), "rb").read() for n in names
+    ), names
+
+
+def read_log_spans(root):
+    with open(os.path.join(root, "log.txt")) as f:
+        return sorted(tuple(map(int, line.split(":"))) for line in f)
+
+
+@pytest.fixture(scope="module")
+def worker_pair():
+    workers = [spawn_worker(), spawn_worker()]
+    yield workers
+    for w in workers:
+        w.terminate()
+
+
+class TestSubprocessWorkers:
+    def test_sharded_remote_parity_with_inline(self, worker_pair, tmp_path):
+        # THE acceptance line: one parallel_for over a ShardedSpace with
+        # two RemoteUnits on SocketTransport worker subprocesses ==
+        # byte-identical results + exact-once coverage vs backend="inline"
+        n_items = 160
+        w0, w1 = worker_pair
+
+        def run(backend_for, root):
+            os.makedirs(root, exist_ok=True)
+            work = ChunkWriter(str(root))
+            rt = HeteroRuntime()
+            rt.register_unit("r0", WorkerKind.CC, work_fn=work,
+                             backend=backend_for("r0", w0))
+            rt.register_unit("r1", WorkerKind.CC, work_fn=work,
+                             backend=backend_for("r1", w1))
+            sp = ShardedSpace(n_items, 2, placement={"r0": 0, "r1": 1})
+            return rt.parallel_for(space=sp, policy="multidynamic",
+                                   engine="interrupt", acc_chunk=8)
+
+        rep_remote = run(lambda name, w: f"remote:{w.address}",
+                         tmp_path / "remote")
+        rep_inline = run(lambda name, w: "inline", tmp_path / "inline")
+
+        for rep, root in ((rep_remote, tmp_path / "remote"),
+                          (rep_inline, tmp_path / "inline")):
+            assert rep.items == n_items
+            assert_exact_tiling(rep.coverage, n_items)
+            # exact-once side effects *in the executing process*: the log
+            # spans tile the space with no duplicates
+            assert_exact_tiling(read_log_spans(root), n_items)
+
+        blob_remote, names_remote = read_results(tmp_path / "remote")
+        blob_inline, names_inline = read_results(tmp_path / "inline")
+        assert names_remote == names_inline
+        assert blob_remote == blob_inline, "remote results diverged from inline"
+
+        # the dispatch-latency split is populated for the remote run only
+        assert set(rep_remote.wire_latency) == {"s0/r0", "s1/r1"}
+        assert rep_inline.wire_latency is None
+
+    def test_killed_worker_subprocess_does_not_hang_the_run(self):
+        handle = spawn_worker()
+        try:
+            rt = HeteroRuntime()
+            rt.register_unit(
+                "r0", WorkerKind.CC, work_fn=_sleepy_noop,
+                backend=RemoteUnit("r0", address=handle.address,
+                                   retry_interval=0.05, max_retries=20),
+            )
+            rt.register_unit("cc0", WorkerKind.CC, work_fn=_sleepy_noop)
+            rt.register_unit("cc1", WorkerKind.CC, work_fn=_sleepy_noop)
+            killer = threading.Timer(0.15, handle.kill)
+            killer.start()
+            try:
+                rep = rt.parallel_for(num_items=300, policy="multidynamic",
+                                      engine="interrupt", acc_chunk=8)
+            finally:
+                killer.cancel()
+            assert rep.items == 300
+            assert_exact_tiling(rep.coverage, 300)
+            lost = [e for e in (rep.events or []) if e["action"] == "lost"]
+            assert len(lost) <= 1  # at most one loss event for one worker
+        finally:
+            handle.terminate()
