@@ -26,6 +26,18 @@ closing :class:`~repro.core.interrupts.RunReport` of the most recent
 batch is exposed as :attr:`ServingEngine.last_run_report` (per-slot
 coverage, utilization, load balance — what the serving bench prints).
 
+*Which* request a freed slot picks up is decided by an
+:class:`~repro.serving.admission.AdmissionPolicy`: when the engine
+snapshots its queue into a scheduler feed, the snapshot is
+policy-ordered (FIFO / priority / earliest-deadline-first / cost-aware
+shortest-predicted-prefill-first), and ``submit()`` consults the same
+policy for **backpressure** — it returns an
+:class:`~repro.serving.admission.AdmissionVerdict`, and a bounded queue
+sheds arrivals instead of growing without limit.  Per-request deadlines
+(``Request.deadline``, relative seconds) flow into
+:attr:`RequestResult.deadline` / ``met_deadline`` so goodput — tokens
+that met their SLO — is measurable (see :mod:`repro.serving.loadgen`).
+
 Slot state lives in the batched KV caches; a new request is prefilled
 with batch=1 and spliced into its slot (pytree scatter on the batch dim).
 ``backend="threads"`` dispatches those prefills to per-slot
@@ -41,6 +53,12 @@ needs ``model_spec={"config", "smoke", "seed"}`` so workers can rebuild
 the model+params deterministically, and prefill results (the batch=1
 cache + first token) travel back in the completion frame.  See
 ``docs/architecture.md`` for how serving maps onto the runtime.
+
+Sampling is reproducible by construction: every sampled token uses a key
+derived as ``fold_in(fold_in(PRNGKey(seed), rid), token_index)`` — a
+pure function of the engine seed, the request id, and the position in
+the stream — so a request's tokens do not depend on which other slots
+happen to be occupied, which slot it lands in, or the admission order.
 """
 
 from __future__ import annotations
@@ -49,7 +67,7 @@ import dataclasses
 import threading
 import time
 from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import Any, Deque, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -61,9 +79,15 @@ from ..core.scheduler import WorkerKind
 from ..core.space import FlatSpace
 from ..core.transport import RemoteUnit
 from ..models import Model
+from .admission import AdmissionPolicy, AdmissionVerdict, make_policy
 from .sampling import sample
 
 __all__ = ["Request", "RequestResult", "ServingEngine"]
+
+
+def _sample_key(seed_key: jax.Array, rid: int, index: int) -> jax.Array:
+    """The per-token sampling key: pure in (seed, rid, stream index)."""
+    return jax.random.fold_in(jax.random.fold_in(seed_key, rid), index)
 
 
 # ---------------------------------------------------------------------------
@@ -91,26 +115,49 @@ def _worker_model(spec: dict):
         return _WORKER_MODELS[key]
 
 
+_WORKER_PREFILL_STEPS: Dict[Tuple[int, int], Any] = {}
+
+
+def _worker_prefill_step(model, max_len: int):
+    """One jitted batch=1 prefill per (model, max_len) in this process."""
+    key = (id(model), int(max_len))
+    with _WORKER_MODELS_LOCK:
+        if key not in _WORKER_PREFILL_STEPS:
+            _WORKER_PREFILL_STEPS[key] = jax.jit(
+                lambda p, toks: model.prefill(p, {"tokens": toks}, max_len)
+            )
+        return _WORKER_PREFILL_STEPS[key]
+
+
 class _RemotePrefill:
     """One request's prefill as picklable work for a remote worker.
 
     The worker rebuilds the model deterministically (same config + init
     seed => identical params), prefills batch=1, and returns the single-
     slot cache as numpy (device-free, transportable) plus the first
-    greedy token; the driver splices both into the decode batch.
+    token — sampled with the *engine's* temperature under the same
+    ``fold_in(fold_in(seed, rid), 0)`` key the driver would use, so
+    remote admission is token-identical to inline admission.
     """
 
-    def __init__(self, spec: dict, prompt, max_len: int) -> None:
+    def __init__(self, spec: dict, prompt, max_len: int, *,
+                 rid: int, temperature: float, sample_seed: int) -> None:
         self.spec = dict(spec)
         self.prompt = np.asarray(prompt, np.int32)
         self.max_len = int(max_len)
+        self.rid = int(rid)
+        self.temperature = float(temperature)
+        self.sample_seed = int(sample_seed)
 
     def __call__(self, chunk):
         model, params = _worker_model(self.spec)
         prompt = jnp.asarray(self.prompt, jnp.int32)[None, :]
-        single = model.init_caches(1, self.max_len)
-        logits, single = model.prefill_from(params, {"tokens": prompt}, single)
-        tok = int(np.asarray(sample(logits, temperature=0.0))[0])
+        step = _worker_prefill_step(model, self.max_len)
+        logits, single = step(params, prompt)
+        key = _sample_key(jax.random.PRNGKey(self.sample_seed), self.rid, 0)
+        tok = int(np.asarray(
+            sample(logits, key, temperature=self.temperature)
+        )[0])
         return jax.tree.map(np.asarray, single), tok
 
 
@@ -120,6 +167,9 @@ class Request:
     prompt: np.ndarray            # (P,) int32
     max_new_tokens: int
     eos_id: int = -1              # -1: run to max_new_tokens
+    priority: int = 0             # PriorityPolicy: higher served first
+    deadline: Optional[float] = None   # SLO budget, seconds from submit
+    submitted_at: Optional[float] = None  # stamped by ServingEngine.submit
 
 
 @dataclasses.dataclass
@@ -129,10 +179,32 @@ class RequestResult:
     prompt_len: int
     submit_time: float
     finish_time: float
+    first_token_time: Optional[float] = None   # prefill completion (TTFT)
+    deadline: Optional[float] = None           # absolute; None = no SLO
+    error: Optional[str] = None                # failed prefill etc.
 
     @property
     def latency(self) -> float:
         return self.finish_time - self.submit_time
+
+    @property
+    def ttft(self) -> Optional[float]:
+        """Time to first token (prefill completion), seconds."""
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.submit_time
+
+    @property
+    def ok(self) -> bool:
+        return self.error is None
+
+    @property
+    def met_deadline(self) -> bool:
+        """True iff the request finished successfully within its SLO
+        (requests without a deadline always count)."""
+        if self.error is not None:
+            return False
+        return self.deadline is None or self.finish_time <= self.deadline
 
 
 def _splice_slot(batched, single, slot: int):
@@ -164,6 +236,9 @@ class ServingEngine:
         seed: int = 0,
         backend: str = "inline",
         model_spec: Optional[dict] = None,
+        policy: Union[str, AdmissionPolicy, None] = "fifo",
+        max_queue: Optional[int] = None,
+        prefill_timeout: float = 60.0,
     ) -> None:
         if mode not in ("continuous", "static"):
             raise ValueError(mode)
@@ -187,11 +262,18 @@ class ServingEngine:
         self.backend = "threads" if backend == "thread" else backend
         self.model_spec = dict(model_spec) if model_spec else None
         self.temperature = temperature
-        self.key = jax.random.PRNGKey(seed)
+        self.seed = int(seed)
+        self._seed_key = jax.random.PRNGKey(self.seed)
+        self.policy = make_policy(policy, max_queue=max_queue)
+        self.prefill_timeout = float(prefill_timeout)
 
         self.queue: Deque[Request] = deque()
+        self._queue_lock = threading.Lock()  # submit() may race _run_loop
         self.results: Dict[int, RequestResult] = {}
+        self.shed: Dict[int, AdmissionVerdict] = {}
         self._submit_times: Dict[int, float] = {}
+        self._deadlines: Dict[int, float] = {}      # rid -> absolute deadline
+        self._first_token: Dict[int, float] = {}    # rid -> TTFT timestamp
 
         # decode slots are the compute units; run() opens a WorkQueue over
         # the submitted requests so refill is completion-driven.  (Remote
@@ -205,6 +287,12 @@ class ServingEngine:
             )
         self._feed: Optional[WorkQueue] = None
         self._pending: List[Request] = []
+        self._feed_exhausted = False
+        # per-slot issuing feed: continuous mode retires an exhausted
+        # feed while its chunks still decode, so completions must route
+        # to the feed that issued them, not the current one
+        self._slot_feed: List[Optional[WorkQueue]] = [None] * slots
+        self._retired_feeds: List[WorkQueue] = []
         self.last_run_report = None
 
         # backend="threads": prefill of admitted requests is dispatched to
@@ -240,34 +328,110 @@ class ServingEngine:
         self._decode = jax.jit(
             lambda p, t, pos, c: model.decode_step(p, t, pos, c)
         )
+        # batch=1 prefill, cache init fused in (max_len is closed over,
+        # so it is static to the trace); retraces once per prompt length
+        self._prefill_step = jax.jit(
+            lambda p, toks: model.prefill(p, {"tokens": toks}, max_len)
+        )
+        # cache splice compiles per slot index (one variant per slot) —
+        # eager per-leaf updates cost about a decode step per admission
+        self._splice = jax.jit(_splice_slot, static_argnums=(2,))
 
     # ------------------------------------------------------------------
-    def submit(self, req: Request) -> None:
-        self._submit_times[req.rid] = time.perf_counter()
-        self.queue.append(req)
+    def submit(self, req: Request) -> AdmissionVerdict:
+        """Offer a request; returns the policy's admit/shed verdict.
+
+        Shed requests are *not* queued (no result will appear for them);
+        they are recorded in :attr:`shed` keyed by rid.  Safe to call
+        from a different thread than :meth:`run` (open-loop load
+        generators submit while the engine serves).
+        """
+        now = time.perf_counter()
+        with self._queue_lock:
+            depth = len(self.queue)
+        verdict = self.policy.admit(req, queue_depth=depth, now=now)
+        if not verdict.admitted:
+            self.shed[req.rid] = verdict
+            return verdict
+        req.submitted_at = now
+        self._submit_times[req.rid] = now
+        if req.deadline is not None:
+            self._deadlines[req.rid] = now + req.deadline
+        with self._queue_lock:
+            self.queue.append(req)
+        return verdict
+
+    @property
+    def has_work(self) -> bool:
+        """True while anything is queued, prefilling, or decoding."""
+        return (bool(self.queue) or bool(self._prefilling)
+                or any(a is not None for a in self.active)
+                or self._feed is not None)
+
+    def _request_key(self, rid: int, index: int) -> jax.Array:
+        return _sample_key(self._seed_key, rid, index)
 
     def _prefill(self, req: Request):
-        """Batch=1 prefill + first greedy token (runs on a prefill unit)."""
+        """Batch=1 prefill + first token (runs on a prefill unit).
+
+        The forward pass runs under ``jit`` (one compiled variant per
+        prompt length — an eager prefill costs 10x+ a decode step in
+        dispatch overhead alone, which would make admission, not
+        scheduling, the serving bottleneck).  The first token honours
+        the engine temperature under the request's position-0 key —
+        decode steps continue the same per-(rid, index) key stream.
+        """
         prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
-        single = self.model.init_caches(1, self.max_len)
-        logits, single = self.model.prefill_from(self.params, {"tokens": prompt}, single)
-        tok = int(np.asarray(sample(logits, temperature=0.0))[0])
+        logits, single = self._prefill_step(self.params, prompt)
+        tok = int(np.asarray(
+            sample(logits, self._request_key(req.rid, 0),
+                   temperature=self.temperature)
+        )[0])
         return single, tok
 
-    def _install(self, slot: int, req: Request, single, tok: int) -> None:
+    def _install(self, slot: int, req: Request, single, tok: int,
+                 prefill_elapsed: Optional[float] = None) -> None:
         """Splice a finished prefill into its decode slot (driver thread)."""
-        self.caches = _splice_slot(self.caches, single, slot)
+        self.caches = self._splice(self.caches, single, slot)
         self.active[slot] = req
         self.generated[slot] = [tok]
         self.lengths[slot] = len(req.prompt)
         self.last_token[slot] = tok
+        self._first_token[req.rid] = time.perf_counter()
+        if prefill_elapsed is not None:
+            self.policy.observe_prefill(
+                f"slot{slot}", len(req.prompt), prefill_elapsed
+            )
+
+    def _fail(self, slot: int, req: Request, error: BaseException) -> None:
+        """Record a failed admission and close its scheduler chunk.
+
+        The request surfaces as a :class:`RequestResult` with ``error``
+        set (empty token stream); the WorkQueue chunk completes so batch
+        coverage accounting stays exact and draining continues.
+        """
+        self.results[req.rid] = RequestResult(
+            rid=req.rid,
+            tokens=[],
+            prompt_len=len(req.prompt),
+            submit_time=self._submit_times[req.rid],
+            finish_time=time.perf_counter(),
+            deadline=self._deadlines.get(req.rid),
+            error=f"{type(error).__name__}: {error}",
+        )
+        self._complete_chunk(slot)
 
     def _admit(self, slot: int) -> bool:
         if self._feed is None:
             return False
         chunk = self._feed.acquire(f"slot{slot}")
         if chunk is None:
+            # every request of this snapshot has been issued; in
+            # continuous mode the run loop may now retire the feed and
+            # re-snapshot, so queued arrivals join mid-batch
+            self._feed_exhausted = True
             return False
+        self._slot_feed[slot] = self._feed
         req = self._pending[chunk.start]
         if self._prefill_units is not None:
             # async admission: the slot's prefill unit works while the
@@ -276,28 +440,53 @@ class ServingEngine:
             # instead of a closure over the live model
             if self.model_spec is not None:
                 work = _RemotePrefill(self.model_spec, req.prompt,
-                                      self.max_len)
+                                      self.max_len, rid=req.rid,
+                                      temperature=self.temperature,
+                                      sample_seed=self.seed)
             else:
                 work = lambda c, req=req: self._prefill(req)  # noqa: E731
             self._prefilling[slot] = req
             self._prefill_units[slot].submit(chunk, work)
             return True
-        self._install(slot, req, *self._prefill(req))
+        t0 = time.perf_counter()
+        try:
+            single, tok = self._prefill(req)
+        except Exception as exc:
+            self._fail(slot, req, exc)
+            return True
+        self._install(slot, req, single, tok,
+                      prefill_elapsed=time.perf_counter() - t0)
         return True
 
     def _collect_prefills(self, block: bool = False) -> None:
-        """Splice any finished async prefills; optionally wait for one."""
+        """Splice any finished async prefills; optionally wait for one.
+
+        A prefill that errored surfaces as a failed :class:`RequestResult`
+        (its chunk completes, draining continues — one poisoned request
+        must not drop its batch-mates).  A blocking wait that expires
+        with prefills still in flight raises, naming the stuck slots —
+        a dead prefill unit must not turn ``run()`` into a silent spin.
+        """
         if self._prefill_bus is None or not self._prefilling:
             return
         if block:
-            self._prefill_bus.wait(timeout=60.0)
+            arrived = self._prefill_bus.wait(timeout=self.prefill_timeout)
+            if not arrived and self._prefilling:
+                stuck = ", ".join(f"slot{s}" for s in sorted(self._prefilling))
+                raise TimeoutError(
+                    f"no prefill completion within {self.prefill_timeout:.1f}s "
+                    f"with prefills still in flight on {stuck}; the unit(s) "
+                    "are stuck or dead"
+                )
         for rec in self._prefill_bus.drain():
             slot = int(rec.unit[len("slot"):])
             req = self._prefilling.pop(slot)
             if rec.error is not None:
-                raise rec.error
+                self._fail(slot, req, rec.error)
+                continue
             single, tok = rec.result
-            self._install(slot, req, single, tok)
+            self._install(slot, req, single, tok,
+                          prefill_elapsed=rec.elapsed)
 
     def _finish(self, slot: int) -> None:
         req = self.active[slot]
@@ -308,11 +497,12 @@ class ServingEngine:
             prompt_len=len(req.prompt),
             submit_time=self._submit_times[req.rid],
             finish_time=time.perf_counter(),
+            first_token_time=self._first_token.get(req.rid),
+            deadline=self._deadlines.get(req.rid),
         )
         self.active[slot] = None
         self.generated[slot] = []
-        if self._feed is not None:
-            self._feed.complete(f"slot{slot}")
+        self._complete_chunk(slot)
 
     def _slot_done(self, slot: int) -> bool:
         req = self.active[slot]
@@ -336,34 +526,95 @@ class ServingEngine:
                 for unit in self._prefill_units.values():
                     unit.close()
 
+    def _snapshot_queue(self) -> None:
+        """Open a policy-ordered feed over the currently queued requests."""
+        with self._queue_lock:
+            fresh = list(self.queue)
+            self.queue.clear()
+        if not fresh:
+            return
+        self._pending = self.policy.order(fresh, now=time.perf_counter())
+        self._feed = self.runtime.work_queue(
+            space=FlatSpace(len(self._pending)),
+            policy="multidynamic", acc_chunk=1,
+        )
+        self._feed_exhausted = False
+
+    def _retire_feed(self) -> None:
+        """Stop acquiring from the current feed; report it when its last
+        in-flight chunk completes (immediately if none are in flight)."""
+        feed = self._feed
+        self._feed = None
+        if feed is None:
+            return
+        if any(f is feed for f in self._slot_feed):
+            self._retired_feeds.append(feed)
+        else:
+            self.last_run_report = feed.report()
+            self._attach_dispatch_stats(self.last_run_report)
+
+    def _complete_chunk(self, slot: int) -> None:
+        """Report the slot's chunk back to the feed that issued it.
+
+        Continuous mode can retire a feed while its chunks still decode;
+        the chunk must complete against the *issuing* feed (coverage
+        accounting is per-feed), and a retired feed produces its
+        RunReport when the last such chunk lands."""
+        feed = self._slot_feed[slot]
+        self._slot_feed[slot] = None
+        if feed is None:
+            return
+        feed.complete(f"slot{slot}")
+        if (feed is not self._feed
+                and any(f is feed for f in self._retired_feeds)
+                and not any(f is feed for f in self._slot_feed)):
+            self._retired_feeds = [f for f in self._retired_feeds
+                                   if f is not feed]
+            self.last_run_report = feed.report()
+            self._attach_dispatch_stats(self.last_run_report)
+
+    def _admit_pass(self) -> bool:
+        """Offer every free slot work from the feed; True if any chunk
+        was acquired.  A failed synchronous admission leaves its slot
+        free with the chunk already completed, so keep pulling until the
+        slot is occupied or the feed has nothing left for it."""
+        acquired = False
+        for b in range(self.slots):
+            while (self.active[b] is None
+                   and b not in self._prefilling
+                   and self._admit(b)):
+                acquired = True
+        return acquired
+
     def _run_loop(self) -> Dict[int, RequestResult]:
         while True:
-            # snapshot newly-submitted requests into a fresh feed whenever
-            # the previous one has fully drained (feeds are per-batch: the
-            # scheduler's iteration space is fixed at open time)
+            # a feed's iteration space is fixed at open time, so live
+            # arrivals cannot join it.  Continuous mode therefore retires
+            # an exhausted feed (all requests issued) as soon as new
+            # arrivals are queued — without this, "continuous" degrades
+            # to batch granularity under open-loop traffic: arrivals
+            # would wait for the whole snapshot to drain even with slots
+            # sitting free.
+            if (self.mode == "continuous" and self._feed is not None
+                    and self._feed_exhausted and self.queue):
+                self._retire_feed()
             if self._feed is None and self.queue:
-                self._pending = list(self.queue)
-                self.queue.clear()
-                self._feed = self.runtime.work_queue(
-                    space=FlatSpace(len(self._pending)),
-                    policy="multidynamic", acc_chunk=1,
-                )
+                self._snapshot_queue()
             # admit work into free slots (completion-driven in continuous
             # mode; batch-granularity in static mode — the polling analogue)
             if self.mode == "continuous" or all(a is None for a in self.active):
-                for b in range(self.slots):
-                    if self.active[b] is None and b not in self._prefilling:
-                        self._admit(b)
+                self._admit_pass()
             self._collect_prefills()
             if all(a is None for a in self.active):
                 if self._prefilling:
                     # nothing decodable yet: sleep on the completion bus
                     self._collect_prefills(block=True)
                     continue
-                if self._feed is not None:
-                    self.last_run_report = self._feed.report()
-                    self._attach_dispatch_stats(self.last_run_report)
-                    self._feed = None
+                # failed async prefills may have freed slots *after* the
+                # admit pass above — retry before declaring the feed done
+                if self._feed is not None and self._admit_pass():
+                    continue
+                self._retire_feed()
                 if self.queue:  # submissions landed after the snapshot
                     continue
                 return dict(self.results)
@@ -373,11 +624,8 @@ class ServingEngine:
                 self.lengths + np.array([len(g) for g in self.generated], np.int32) - 1,
                 jnp.int32,
             )[:, None]
-            self.key, sk = jax.random.split(self.key)
             logits, self.caches = self._decode(self.params, tokens, positions, self.caches)
-            nxt = np.asarray(
-                sample(logits, sk, temperature=self.temperature)
-            )
+            nxt = self._sample_step(logits)
             self.steps += 1
             for b in range(self.slots):
                 if self.active[b] is None:
@@ -387,6 +635,24 @@ class ServingEngine:
                 self.last_token[b] = tok
                 if self._slot_done(b):
                     self._finish(b)
+
+    def _sample_step(self, logits) -> np.ndarray:
+        """Sample one token per slot under per-(rid, index) keys.
+
+        Greedy decode needs no keys.  Stochastic decode folds a key per
+        slot from the request id and its stream position, so a request's
+        tokens are identical for a fixed seed regardless of which other
+        slots are occupied (and of admission order) — batch composition
+        cannot perturb RNG.
+        """
+        if self.temperature <= 0.0:
+            return np.asarray(sample(logits, temperature=0.0))
+        keys = jnp.stack([
+            self._request_key(self.active[b].rid, len(self.generated[b]))
+            if self.active[b] is not None else self._seed_key
+            for b in range(self.slots)
+        ])
+        return np.asarray(sample(logits, keys, temperature=self.temperature))
 
     def _attach_dispatch_stats(self, report) -> None:
         """Expose prefill dispatch latency per slot on the batch report."""
@@ -401,13 +667,37 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def throughput_report(self) -> Dict[str, float]:
-        done = list(self.results.values())
+        """Serving metrics with a stable schema.
+
+        Every key below is always present (zeros when nothing finished),
+        so consumers can index without guarding:
+
+        ``tokens, steps, tokens_per_step, completed, failed, shed,
+        mean_latency, p50_latency, p95_latency, p99_latency, mean_ttft,
+        goodput_tokens``
+        """
+        done = [r for r in self.results.values() if r.error is None]
+        failed = len(self.results) - len(done)
         total_tokens = sum(len(r.tokens) for r in done)
-        if not done:
-            return {"tokens": 0, "steps": self.steps, "tokens_per_step": 0.0}
+        lats = [r.latency for r in done]
+        ttfts = [r.ttft for r in done if r.ttft is not None]
+
+        def pct(p: float) -> float:
+            return float(np.percentile(lats, p)) if lats else 0.0
+
         return {
             "tokens": total_tokens,
             "steps": self.steps,
             "tokens_per_step": total_tokens / max(self.steps, 1),
-            "mean_latency": float(np.mean([r.latency for r in done])),
+            "completed": len(done),
+            "failed": failed,
+            "shed": len(self.shed),
+            "mean_latency": float(np.mean(lats)) if lats else 0.0,
+            "p50_latency": pct(50.0),
+            "p95_latency": pct(95.0),
+            "p99_latency": pct(99.0),
+            "mean_ttft": float(np.mean(ttfts)) if ttfts else 0.0,
+            "goodput_tokens": sum(
+                len(r.tokens) for r in done if r.met_deadline
+            ),
         }

@@ -17,6 +17,13 @@ def sample(
     temperature: float = 0.0,
     top_k: int = 0,
 ) -> jax.Array:
+    """Greedy (``temperature<=0``) or stochastic sampling.
+
+    ``key`` is either one PRNG key shared by the whole batch, or a
+    *stacked* ``(B, ...)`` array of per-row keys — one independent key
+    per batch row, so a row's draw cannot depend on its batch-mates
+    (the serving engine's per-request key streams rely on this).
+    """
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     lf = logits.astype(jnp.float32) / temperature
@@ -24,4 +31,13 @@ def sample(
         thresh = jax.lax.top_k(lf, top_k)[0][..., -1:]
         lf = jnp.where(lf < thresh, -jnp.inf, lf)
     assert key is not None, "stochastic sampling needs a key"
+    single_ndim = 0 if jnp.issubdtype(key.dtype, jax.dtypes.prng_key) else 1
+    if key.ndim == single_ndim + 1:   # stacked per-row keys
+        if key.shape[0] != lf.shape[0]:
+            raise ValueError(
+                f"{key.shape[0]} per-row keys for batch {lf.shape[0]}"
+            )
+        return jax.vmap(
+            lambda k, row: jax.random.categorical(k, row, axis=-1)
+        )(key, lf).astype(jnp.int32)
     return jax.random.categorical(key, lf, axis=-1).astype(jnp.int32)

@@ -1,0 +1,115 @@
+"""Validate a committed ``BENCH_serving.json`` artifact.
+
+    python tools/check_bench.py BENCH_serving.json [--require-continuous-wins]
+
+Checks (all structural, so they hold for the *committed* artifact and
+for a fresh ``benchmarks/bench_serving.py --loadgen --json`` run alike):
+
+* ``schema`` is exactly ``bench_serving/v1``;
+* ``scenario`` and ``engine`` blocks are present and seeded;
+* every config entry carries ``policy``/``mode``/``backend`` and a
+  ``metrics`` dict whose keys are exactly
+  :data:`repro.serving.loadgen.METRIC_KEYS`;
+* at least two policies and both refill modes are covered;
+* with ``--require-continuous-wins``: for every (policy, backend) pair
+  that has both modes, ``mode="continuous"`` strictly beats
+  ``mode="static"`` on ``goodput_tokens_per_s`` — the paper's
+  interrupt-beats-polling claim restated as a serving acceptance gate.
+  CI applies this flag to the committed artifact (deterministic) and
+  only schema-checks the fresh smoke run (hosted runners are too noisy
+  to gate an ordering on a single quick run).
+
+Exit code 0 on success, 1 with a diagnostic on any violation.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# tools/ is not a package; resolve src/ relative to the repo root so the
+# schema constant stays single-sourced even without PYTHONPATH.
+import os
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.serving.loadgen import METRIC_KEYS  # noqa: E402
+
+SCHEMA = "bench_serving/v1"
+
+
+def check(doc: dict, *, require_continuous_wins: bool = False) -> list:
+    """Return a list of violation strings (empty = artifact is valid)."""
+    errs = []
+    if doc.get("schema") != SCHEMA:
+        errs.append(f"schema is {doc.get('schema')!r}, want {SCHEMA!r}")
+    for block in ("scenario", "engine"):
+        if not isinstance(doc.get(block), dict):
+            errs.append(f"missing {block!r} block")
+    if isinstance(doc.get("scenario"), dict) and "seed" not in doc["scenario"]:
+        errs.append("scenario has no seed — artifact is not reproducible")
+    configs = doc.get("configs")
+    if not isinstance(configs, list) or not configs:
+        return errs + ["configs must be a non-empty list"]
+
+    by_pair = {}
+    for i, entry in enumerate(configs):
+        for field in ("policy", "mode", "backend"):
+            if not isinstance(entry.get(field), str):
+                errs.append(f"configs[{i}] missing {field!r}")
+        metrics = entry.get("metrics")
+        if not isinstance(metrics, dict):
+            errs.append(f"configs[{i}] missing metrics")
+            continue
+        missing = set(METRIC_KEYS) - set(metrics)
+        extra = set(metrics) - set(METRIC_KEYS)
+        if missing:
+            errs.append(f"configs[{i}] metrics missing {sorted(missing)}")
+        if extra:
+            errs.append(f"configs[{i}] metrics has extra keys {sorted(extra)}")
+        key = (entry.get("policy"), entry.get("backend"))
+        by_pair.setdefault(key, {})[entry.get("mode")] = metrics
+
+    policies = {p for p, _ in by_pair}
+    modes = {m for pair in by_pair.values() for m in pair}
+    if len(policies) < 2:
+        errs.append(f"want >=2 policies, got {sorted(policies)}")
+    if not {"static", "continuous"} <= modes:
+        errs.append(f"want both refill modes, got {sorted(modes)}")
+
+    if require_continuous_wins:
+        for (policy, backend), pair in sorted(by_pair.items()):
+            if not {"static", "continuous"} <= set(pair):
+                continue
+            cont = pair["continuous"].get("goodput_tokens_per_s", 0.0)
+            stat = pair["static"].get("goodput_tokens_per_s", 0.0)
+            if not cont > stat:
+                errs.append(
+                    f"{policy}/{backend}: continuous goodput "
+                    f"{cont:.2f} tok/s does not beat static {stat:.2f}"
+                )
+    return errs
+
+
+def main(argv: list) -> int:
+    ap = argparse.ArgumentParser(
+        description="Validate a BENCH_serving.json artifact")
+    ap.add_argument("path", help="artifact to validate")
+    ap.add_argument("--require-continuous-wins", action="store_true",
+                    help="fail unless continuous beats static on goodput "
+                         "for every (policy, backend) pair")
+    args = ap.parse_args(argv)
+    with open(args.path) as fh:
+        doc = json.load(fh)
+    errs = check(doc, require_continuous_wins=args.require_continuous_wins)
+    for e in errs:
+        print(f"check_bench: {e}", file=sys.stderr)
+    if not errs:
+        n = len(doc.get("configs", []))
+        print(f"check_bench: OK — {n} configs, schema {SCHEMA}")
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
