@@ -26,7 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.paper_eneac import HotspotConfig, SpmmConfig, TABLE1_CONFIGS
-from repro.core import HeteroRuntime, ShardedSpace, WorkerKind
+from repro.core import CostModel, HeteroRuntime, ShardedSpace, SimulatedClock, WorkerKind
 from repro.core.interrupts import RunReport
 from repro.kernels.hotspot.ref import hotspot_step_ref
 from repro.kernels.spmm.ref import make_problem, spmm_ell_ref, to_block_ell
@@ -138,6 +138,7 @@ def run_config(
     *, n_items: int, acc_chunk: int, t_cc: float, t_acc: float,
     hp_penalty: float, time_scale: float = 1.0, shards: int = 1,
     backend: str = "threads", worker_addrs: List[str] = (),
+    policy: str = "multidynamic",
 ) -> Tuple[float, RunReport]:
     """Returns (throughput in items/ms — paper units, the full RunReport).
 
@@ -154,6 +155,11 @@ def run_config(
     SocketTransport — ``worker_addrs`` assigns units to the spawned
     workers round-robin, and the summary's ``wire_us`` column becomes
     the measured wire + remote-queue share of dispatch latency).
+
+    ``policy="learned"`` attaches a fresh :class:`CostModel` and runs one
+    untimed warmup pass first (the adaptive cold-start that trains the
+    model), then times the measured-split run — the online analogue of
+    the oracle policy, with no registered speeds consulted.
     """
     if backend == "remote" and not worker_addrs:
         raise ValueError("backend='remote' needs worker_addrs")
@@ -163,7 +169,7 @@ def run_config(
             "--backend remote needs explicit ShardedSpace placement, which "
             "this benchmark does not model"
         )
-    rt = HeteroRuntime()
+    rt = HeteroRuntime(cost_model=CostModel() if policy == "learned" else None)
     registered = 0
 
     def register(name, kind, t_item):
@@ -187,9 +193,17 @@ def run_config(
     # host threads ARE the compute units.
     engine = "interrupt" if (interrupts or units == "cc") else "polling"
     space = ShardedSpace(n_items, shards) if shards > 1 else None
+    if policy == "learned":
+        # warmup: adaptive cold-start run that trains the cost model;
+        # only the second (measured-split) run is timed
+        rt.parallel_for(
+            num_items=0 if space is not None else n_items,
+            space=ShardedSpace(n_items, shards) if shards > 1 else None,
+            policy="learned", engine=engine, acc_chunk=acc_chunk,
+        )
     rep = rt.parallel_for(
         num_items=0 if space is not None else n_items, space=space,
-        policy="multidynamic", engine=engine, acc_chunk=acc_chunk,
+        policy=policy, engine=engine, acc_chunk=acc_chunk,
     )
     return rep.items / (rep.wall_time / time_scale) / 1e3, rep
 
@@ -214,6 +228,7 @@ def report_columns(rep: RunReport) -> Tuple[float, float, float, float, float]:
 def table1(
     benchmark: str, *, quick: bool = False, shards: int = 1,
     backend: str = "threads", workers: int = 2,
+    policy: str = "multidynamic",
 ) -> List[Tuple[str, float, str, float, float, float, float, float]]:
     if benchmark == "hotspot":
         cal = calibrate_hotspot(256 if quick else 512)
@@ -236,6 +251,8 @@ def table1(
     suffix = f"_x{shards}shards" if shards > 1 else ""
     if backend == "remote":
         suffix += "_remote"
+    if policy != "multidynamic":
+        suffix += f"_{policy}"
     handles, addrs = _spawn_remote_workers(backend, workers)
     try:
         for cid, label, units, port, interrupts in TABLE1_CONFIGS:
@@ -244,7 +261,7 @@ def table1(
                 n_items=n_items, acc_chunk=acc_chunk,
                 t_cc=t_cc, t_acc=t_acc, hp_penalty=hp_penalty,
                 time_scale=time_scale, shards=shards, backend=backend,
-                worker_addrs=addrs,
+                worker_addrs=addrs, policy=policy,
             )
             lb, u_mean, u_min, disp_us, wire_us = report_columns(rep)
             rows.append((f"table1_{benchmark}_{cid}_{label}{suffix}", thr,
@@ -292,8 +309,67 @@ def chunk_sweep(benchmark: str = "hotspot", *, quick: bool = False,
     return rows
 
 
+def costmodel_bench(
+    *, seeds: int = 32, n_items: int = 4096, acc_chunk: int = 64,
+    n_units: int = 4, base_seed: int = 0,
+) -> Dict:
+    """Seeded learned-vs-oracle convergence sweep → ``bench_costmodel/v1``.
+
+    Per seed: randomized heterogeneous unit speeds under a
+    :class:`SimulatedClock` (fully deterministic — no sleeps, no jax), a
+    cold ``policy="learned"`` warmup run that trains a fresh
+    :class:`CostModel`, then a timed learned run against the oracle
+    split from the true registered speeds.  The committed artifact's
+    per-seed ``gap`` (learned/oracle makespan − 1) is the acceptance
+    number ``tools/check_bench.py`` enforces at ≤ 10% in CI.
+    """
+    import random
+
+    configs = []
+    for s in range(seeds):
+        rng = random.Random(base_seed + s)
+        model = CostModel()
+        rt = HeteroRuntime(clock=SimulatedClock(), cost_model=model)
+        speeds = {}
+        for i in range(n_units):
+            acc = i < max(1, n_units // 2)
+            name = f"{'acc' if acc else 'cc'}{i}"
+            speed = (rng.uniform(40.0, 400.0) if acc
+                     else rng.uniform(5.0, 50.0))
+            rt.register_unit(name, WorkerKind.ACC if acc else WorkerKind.CC,
+                             speed=speed)
+            speeds[name] = speed
+        warm = rt.parallel_for(num_items=n_items, policy="learned",
+                               acc_chunk=acc_chunk)
+        learned = rt.parallel_for(num_items=n_items, policy="learned",
+                                  acc_chunk=acc_chunk)
+        oracle = rt.parallel_for(num_items=n_items, policy="oracle",
+                                 acc_chunk=acc_chunk)
+        gap = learned.makespan / oracle.makespan - 1.0
+        configs.append({
+            "seed": base_seed + s,
+            "units": {k: round(v, 4) for k, v in speeds.items()},
+            "warmup_makespan": warm.makespan,
+            "learned_makespan": learned.makespan,
+            "oracle_makespan": oracle.makespan,
+            "learned_chunks": learned.chunks,
+            "gap": gap,
+        })
+    gaps = [c["gap"] for c in configs]
+    return {
+        "schema": "bench_costmodel/v1",
+        "params": {"seeds": seeds, "n_items": n_items,
+                   "acc_chunk": acc_chunk, "n_units": n_units,
+                   "base_seed": base_seed},
+        "configs": configs,
+        "max_gap": max(gaps),
+        "mean_gap": sum(gaps) / len(gaps),
+    }
+
+
 def main() -> None:
     import argparse
+    import json
 
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true", help="reduced sizes (CI-scale)")
@@ -313,7 +389,33 @@ def main() -> None:
     ap.add_argument("--workers", type=int, default=2,
                     help="worker subprocesses to spawn for --backend remote "
                          "(units are assigned round-robin)")
+    ap.add_argument("--policy", default="multidynamic",
+                    choices=["multidynamic", "learned"],
+                    help="chunking policy for the table runs; 'learned' "
+                         "trains a CostModel on one untimed warmup pass "
+                         "and times the measured pre-split run")
+    ap.add_argument("--costmodel", action="store_true",
+                    help="run the seeded learned-vs-oracle convergence "
+                         "sweep instead of the table (SimulatedClock; "
+                         "emits a bench_costmodel/v1 JSON artifact)")
+    ap.add_argument("--seeds", type=int, default=32,
+                    help="seed count for --costmodel")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="with --costmodel: write the artifact here "
+                         "(default: stdout)")
     args = ap.parse_args()
+    if args.costmodel:
+        doc = costmodel_bench(seeds=args.seeds,
+                              n_items=2048 if args.quick else 4096)
+        payload = json.dumps(doc, indent=1, sort_keys=True) + "\n"
+        if args.json:
+            with open(args.json, "w") as fh:
+                fh.write(payload)
+            print(f"costmodel: {len(doc['configs'])} seeds, "
+                  f"max gap {doc['max_gap']:.4f} -> {args.json}")
+        else:
+            print(payload, end="")
+        return
     print("name,throughput,unit,load_balance,util_mean,util_min,disp_us,"
           "wire_us")
     for bench in args.benchmarks:
@@ -321,6 +423,7 @@ def main() -> None:
              wire_us) in table1(
             bench, quick=args.quick, shards=args.shards,
             backend=args.backend, workers=args.workers,
+            policy=args.policy,
         ):
             print(f"{name},{thr:.3f},{unit},{lb:.3f},{u_mean:.3f},"
                   f"{u_min:.3f},{disp_us:.1f},{wire_us:.1f}")

@@ -10,6 +10,9 @@
   hosts backend units behind a transport, ``RemoteUnit`` proxies them
   into the runtime as ordinary units.
 * :mod:`repro.core.hetero` — throughput-proportional work partitioning.
+* :mod:`repro.core.costmodel` — online per-(unit, kernel) cost model:
+  EWMA capability descriptors learned from run reports, persisted as a
+  versioned JSON store; feeds ``policy="learned"`` splits.
 * :mod:`repro.core.straggler` — straggler detection and mitigation.
 * :mod:`repro.core.elastic` — node-failure handling / mesh rescale plans.
 * :mod:`repro.core.moe_dispatch` — capacity-chunk MoE dispatch with dense
@@ -50,6 +53,7 @@ from .transport import (
     spawn_worker,
 )
 from .space import FlatSpace, IterationSpace, ShardedSpace, TiledSpace
+from .costmodel import CostEntry, CostModel, CostModelWarning
 from .runtime import HeteroRuntime, SimulatedClock, UnitSpec, WallClock, WorkQueue
 from .hetero import HeteroPartition, HeterogeneousPartitioner, ThroughputTracker
 from .straggler import MitigationPlan, StragglerDetector, StragglerMitigator, StragglerReport
@@ -99,6 +103,9 @@ __all__ = [
     "HeteroPartition",
     "HeterogeneousPartitioner",
     "ThroughputTracker",
+    "CostModel",
+    "CostEntry",
+    "CostModelWarning",
     "StragglerDetector",
     "StragglerMitigator",
     "StragglerReport",

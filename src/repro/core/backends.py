@@ -505,6 +505,16 @@ class BackendEngine:
     (in-flight chunk completes and counts; pre-split leftovers are
     requeued); join = a fresh backend from ``join_backend`` starts
     stealing immediately.  Events due after full coverage are dropped.
+
+    ``straggler`` attaches a
+    :class:`~repro.core.straggler.StragglerDetector`: every successful
+    completion feeds the unit's per-item service time, and a unit the
+    detector convicts (EWMA over the fleet-median threshold for its
+    configured consecutive patience) is *quarantined* — retired through
+    the same path as an elastic leave, so the exact-once requeue
+    invariant carries over unchanged.  At most one quarantine per unit
+    per run; the last active unit is never quarantined (slow coverage
+    beats no coverage).  Recorded as an ``action="straggler"`` event.
     """
 
     def __init__(
@@ -517,6 +527,7 @@ class BackendEngine:
         elastic: Sequence[ElasticEvent] = (),
         default_fn: Optional[WorkFn] = None,
         join_backend: Optional[Callable[[ElasticEvent], BackendUnit]] = None,
+        straggler=None,
     ) -> None:
         self.sched = sched
         self.fns: Dict[str, Optional[WorkFn]] = dict(fns)
@@ -525,12 +536,14 @@ class BackendEngine:
         self.pending = sorted(elastic, key=lambda e: e.t)
         self.default_fn = default_fn
         self.join_backend = join_backend or (lambda ev: ThreadUnit(ev.unit))
+        self.straggler = straggler
         self.bus = CompletionBus()
         self.events: List[dict] = []          # RunReport.events entries
         self._own_units = set()               # started here -> closed here
         self._all_units = dict(units)         # includes retired units (stats)
         self._busy: set = set()
         self._leaving: set = set()
+        self._straggled: set = set()
         self._errors: List[BaseException] = []
         self._t0 = 0.0
 
@@ -633,6 +646,41 @@ class BackendEngine:
                 self._errors.append(rec.error)
             if rec.unit in self._leaving:
                 self._retire(rec.unit)
+            elif rec.error is None:
+                self._observe_straggler(rec)
+
+    def _observe_straggler(self, rec: CompletionRecord) -> None:
+        """Feed one completion's per-item service time to the detector and
+        quarantine the unit on conviction.
+
+        Quarantine reuses the retire path: the scheduler requeues any
+        never-issued pre-split assignment under its lock, so survivors
+        pick the span up exactly once — the elastic invariant, unchanged.
+        The completion that convicts has already been counted (real work
+        is never recalled).  Never convicts the last active unit, and at
+        most once per unit per run; ``forget`` drops the departed unit's
+        EWMA so its stale sample stops skewing the fleet median.
+        """
+        det = self.straggler
+        if det is None or rec.chunk is None or rec.chunk.size <= 0:
+            return
+        name = rec.unit
+        if name in self._straggled or name in self.sched.removed:
+            return
+        report = det.observe({name: rec.elapsed / rec.chunk.size})
+        if name not in report.stragglers:
+            return
+        active = [n for n in self.units
+                  if n not in self.sched.removed and n not in self._leaving]
+        if name not in active or len(active) <= 1:
+            return
+        self._straggled.add(name)
+        self.events.append({
+            "t": self._now(), "action": "straggler", "unit": name,
+            "requeued": None, "ratio": report.ratios.get(name),
+        })
+        self._retire(name)
+        det.forget(name)
 
     # -- the loop -----------------------------------------------------------
     def run(self) -> float:

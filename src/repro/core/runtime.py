@@ -21,8 +21,11 @@ Orthogonal knobs, matching the paper's ablation axes:
 
 * ``policy`` — how the space is chunked: ``"multidynamic"`` (the paper's
   adaptive scheme), ``"static"`` (even pre-split baseline), ``"oracle"``
-  (throughput-proportional pre-split), or an explicit ``{unit: (start,
-  stop)}`` mapping for externally-decided splits.
+  (throughput-proportional pre-split from *registered* speeds),
+  ``"learned"`` (proportional pre-split from *measured* speeds in the
+  runtime's attached :class:`~repro.core.costmodel.CostModel`, falling
+  back to adaptive until every unit has been observed), or an explicit
+  ``{unit: (start, stop)}`` mapping for externally-decided splits.
 * ``engine`` — how completions are observed: ``"interrupt"`` (the
   event-driven :class:`~repro.core.backends.BackendEngine`: chunks
   execute on real backend units — dedicated threads, process pools, jax
@@ -68,6 +71,7 @@ from dataclasses import dataclass
 from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 from .backends import BackendEngine, BackendUnit, make_backend
+from .costmodel import CostModel
 from .elastic import ElasticEvent, ElasticSchedule
 from .interrupts import PollingEngine, RunReport
 from .scheduler import (
@@ -79,6 +83,7 @@ from .scheduler import (
     WorkerState,
 )
 from .space import FlatSpace, IterationSpace, ShardedSpace, TiledSpace, as_space
+from .straggler import StragglerDetector
 
 __all__ = [
     "HeteroRuntime",
@@ -89,7 +94,9 @@ __all__ = [
 ]
 
 WorkFn = Callable[[Chunk], None]
-POLICIES = ("multidynamic", "static", "oracle")
+# "learned" must stay last: property batteries index POLICIES[pick % 3]
+# to draw from the three cost-free policies.
+POLICIES = ("multidynamic", "static", "oracle", "learned")
 ENGINES = ("interrupt", "polling", "inline")
 
 
@@ -387,8 +394,9 @@ def _build_report(
 class HeteroRuntime:
     """One registry of heterogeneous units, many ways to run them."""
 
-    def __init__(self, *, clock=None) -> None:
+    def __init__(self, *, clock=None, cost_model: Optional[CostModel] = None) -> None:
         self.clock = clock if clock is not None else WallClock()
+        self.cost_model = cost_model
         self._units: Dict[str, UnitSpec] = {}
 
     # -- unit registry ------------------------------------------------------
@@ -440,6 +448,7 @@ class HeteroRuntime:
         scheduler_kwargs: Optional[dict],
         *,
         offset: int = 0,
+        kernel: str = "default",
     ) -> _TrackedScheduler:
         kinds = {s.name: s.kind for s in specs}
         if isinstance(policy, Mapping):
@@ -455,6 +464,27 @@ class HeteroRuntime:
                 num_items,
                 {s.name: (1.0 if s.speed is None else s.speed) for s in specs},
             )
+        elif policy == "learned":
+            # Like oracle, but the speeds are *measured*: the attached cost
+            # model's per-(unit, kernel) EWMA throughputs.  Registered
+            # ``speed`` priors are deliberately not consulted — they are the
+            # ground truth the model is supposed to discover.  Until every
+            # unit has an observation, fall back to the adaptive scheduler
+            # seeded with whatever partial knowledge the model holds.
+            names = [s.name for s in specs]
+            learned = (self.cost_model.speeds(names, kernel)
+                       if self.cost_model is not None else {})
+            if len(learned) == len(names):
+                inner = OracleStaticScheduler(
+                    num_items, {n: learned[n] for n in names}
+                )
+            else:
+                inner = MultiDynamicScheduler(
+                    num_items, acc_chunk, **(scheduler_kwargs or {})
+                )
+                for s in specs:
+                    inner.add_worker(s.name, s.kind,
+                                     throughput=learned.get(s.name))
         else:
             raise ValueError(f"unknown policy {policy!r} (want {POLICIES} or a mapping)")
         return _TrackedScheduler(inner, kinds, offset=offset)
@@ -466,15 +496,18 @@ class HeteroRuntime:
         units: Optional[Sequence[str]] = None,
         policy: str = "oracle",
         acc_chunk: int = 64,
+        kernel: str = "default",
     ) -> Dict[str, Tuple[int, int]]:
         """Dry-run split: the first chunk each unit would receive.
 
         For the static policies this *is* the full partition; clients like
         :class:`~repro.core.parallel_for.HybridExecutor` use it to place
-        work without running the engine.
+        work without running the engine.  ``kernel`` selects which cost
+        model entries a ``policy="learned"`` plan consults.
         """
         specs = self._resolve_units(units)
-        sched = self._make_scheduler(num_items, specs, policy, acc_chunk, None)
+        sched = self._make_scheduler(num_items, specs, policy, acc_chunk, None,
+                                     kernel=kernel)
         out: Dict[str, Tuple[int, int]] = {}
         for s in specs:
             chunk = sched.next_chunk(s.name, now=0.0)
@@ -491,6 +524,7 @@ class HeteroRuntime:
         policy: Union[str, Mapping[str, Tuple[int, int]]] = "multidynamic",
         acc_chunk: int = 1,
         scheduler_kwargs: Optional[dict] = None,
+        kernel: str = "default",
     ) -> WorkQueue:
         """Open an incremental completion-driven feed over an iteration space.
 
@@ -503,7 +537,8 @@ class HeteroRuntime:
             raise ValueError("work_queue cannot iterate a ShardedSpace")
         specs = self._resolve_units(units)
         sched = self._make_scheduler(
-            sp.num_items, specs, policy, acc_chunk, scheduler_kwargs
+            sp.num_items, specs, policy, acc_chunk, scheduler_kwargs,
+            kernel=kernel,
         )
         return WorkQueue(sched, self.clock)
 
@@ -523,6 +558,8 @@ class HeteroRuntime:
         scheduler_kwargs: Optional[dict] = None,
         elastic: Optional[Union[ElasticSchedule, Sequence[ElasticEvent]]] = None,
         backend: Optional[Union[str, BackendUnit]] = None,
+        kernel: str = "default",
+        straggler: Optional[StragglerDetector] = None,
     ) -> RunReport:
         """Execute an iteration space across the registered units.
 
@@ -564,6 +601,28 @@ class HeteroRuntime:
         sharded runs), or a :class:`~repro.core.backends.BackendUnit`
         instance (single-unit runs only).  See
         :mod:`repro.core.backends` and :mod:`repro.core.transport`.
+
+        ``kernel`` names the workload for the attached cost model (the
+        per-(unit, kernel) learning key): with a ``cost_model=`` on the
+        runtime every run's per-unit throughputs and latencies are folded
+        in under this key, and ``policy="learned"`` splits the space from
+        the model's measured speeds for this kernel — an oracle-style
+        proportional pre-split once every unit has been observed, the
+        adaptive multidynamic scheduler (seeded with whatever partial
+        knowledge exists) before that.  Registered ``speed`` priors are
+        never consulted by the learned policy.
+
+        ``straggler`` attaches a
+        :class:`~repro.core.straggler.StragglerDetector` to the run
+        (wall-clock ``"interrupt"`` engine, non-sharded only — one
+        detector cannot be shared by concurrent shard engines): every
+        chunk completion feeds per-item service time, and a unit whose
+        EWMA breaches the fleet median for the detector's configured
+        consecutive patience is *quarantined* — retired through the
+        elastic leave path, so its in-flight chunk completes, pre-split
+        leftovers requeue exact-once to survivors, and the report gains
+        an ``action="straggler"`` event.  The last active unit is never
+        quarantined.
         """
         if work_fn is not None and not callable(work_fn):
             raise TypeError(
@@ -612,6 +671,24 @@ class HeteroRuntime:
             raise ValueError(
                 f"item_cost has {len(item_cost)} entries for {sp.num_items} items"
             )
+        if straggler is not None:
+            if simulated:
+                raise ValueError(
+                    "straggler detection runs in the wall-clock BackendEngine; "
+                    "a SimulatedClock run has no real service times to watch "
+                    "— model slowdowns via item_cost/speed instead"
+                )
+            if engine != "interrupt":
+                raise ValueError(
+                    "straggler detection needs the event-driven 'interrupt' "
+                    "engine (serial drivers cannot quarantine mid-run)"
+                )
+            if isinstance(sp, ShardedSpace):
+                raise ValueError(
+                    "one StragglerDetector cannot be shared by concurrent "
+                    "shard engines; run per-shard parallel_for calls with "
+                    "their own detectors instead"
+                )
 
         if isinstance(sp, ShardedSpace):
             if isinstance(policy, Mapping):
@@ -632,26 +709,33 @@ class HeteroRuntime:
                     "per-unit remote backends and pin them via "
                     "ShardedSpace(placement={unit: shard}) instead"
                 )
-            return self._run_sharded(
+            rep = self._run_sharded(
                 sp, specs, fns, work_fn, policy, engine, acc_chunk,
                 item_cost, poll_interval, scheduler_kwargs, elastic_events,
-                backend,
+                backend, kernel=kernel,
             )
-
-        sched = self._make_scheduler(
-            sp.num_items, specs, policy, acc_chunk, scheduler_kwargs
-        )
-        if simulated:
-            return self._run_simulated(
-                sched, specs, fns, engine, sp.num_items, item_cost,
-                poll_interval, clock=self.clock, elastic=elastic_events,
-                expected=sp.num_items, default_fn=work_fn,
+        else:
+            sched = self._make_scheduler(
+                sp.num_items, specs, policy, acc_chunk, scheduler_kwargs,
+                kernel=kernel,
             )
-        return self._run_wall(
-            sched, specs, fns, engine, poll_interval,
-            elastic=elastic_events, expected=sp.num_items,
-            default_fn=work_fn, backend=backend,
-        )
+            if simulated:
+                rep = self._run_simulated(
+                    sched, specs, fns, engine, sp.num_items, item_cost,
+                    poll_interval, clock=self.clock, elastic=elastic_events,
+                    expected=sp.num_items, default_fn=work_fn,
+                )
+            else:
+                rep = self._run_wall(
+                    sched, specs, fns, engine, poll_interval,
+                    elastic=elastic_events, expected=sp.num_items,
+                    default_fn=work_fn, backend=backend, straggler=straggler,
+                )
+        if self.cost_model is not None:
+            # every run teaches the model — including multidynamic warmups,
+            # which is what lets a later policy="learned" run pre-split
+            self.cost_model.observe_report(rep, kernel)
+        return rep
 
     @staticmethod
     def _normalize_elastic(
@@ -695,6 +779,7 @@ class HeteroRuntime:
         expected: int,
         default_fn: Optional[WorkFn] = None,
         backend: Optional[Union[str, BackendUnit]] = None,
+        straggler: Optional[StragglerDetector] = None,
     ) -> RunReport:
         if engine == "interrupt":
             # Event-driven dispatch over real backend units: each unit's
@@ -715,6 +800,7 @@ class HeteroRuntime:
                     backend if not isinstance(backend, BackendUnit) else None,
                     ev.unit,
                 ),
+                straggler=straggler,
             )
             wall = eng.run()
             lost = any(ev.get("action") == "lost" for ev in eng.events)
@@ -752,6 +838,8 @@ class HeteroRuntime:
         scheduler_kwargs: Optional[dict],
         elastic_events: List[ElasticEvent],
         backend: Optional[Union[str, BackendUnit]] = None,
+        *,
+        kernel: str = "default",
     ) -> RunReport:
         """One scheduler + engine per shard; merge into a global report.
 
@@ -787,7 +875,7 @@ class HeteroRuntime:
             scheds.append(
                 self._make_scheduler(
                     stop - start, shard_specs[k], policy, acc_chunk,
-                    scheduler_kwargs, offset=start,
+                    scheduler_kwargs, offset=start, kernel=kernel,
                 )
             )
 

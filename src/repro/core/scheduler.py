@@ -35,7 +35,38 @@ __all__ = [
     "MultiDynamicScheduler",
     "StaticScheduler",
     "OracleStaticScheduler",
+    "proportional_split",
 ]
+
+
+def proportional_split(num_items: int, throughputs: Dict[str, float]) -> Dict[str, int]:
+    """Split ``[0, num_items)`` proportionally to per-unit throughputs.
+
+    Worker order follows ``throughputs`` insertion order; every non-last
+    share is rounded then clamped so rounding can never overshoot the
+    space, and the last worker absorbs the exact remainder — the split
+    always tiles the space.  Shared by :class:`OracleStaticScheduler`
+    (user-supplied speeds) and the learned policy in
+    :mod:`repro.core.runtime` (measured speeds from the cost model).
+    """
+    if num_items < 0:
+        raise ValueError(f"num_items must be non-negative, got {num_items}")
+    if not throughputs:
+        raise ValueError("throughputs must not be empty")
+    total = sum(throughputs.values())
+    if total <= 0:
+        raise ValueError(f"throughputs must sum positive, got {total}")
+    sizes: Dict[str, int] = {}
+    start = 0
+    items = list(throughputs.items())
+    for i, (w, t) in enumerate(items):
+        if i == len(items) - 1:
+            size = num_items - start
+        else:
+            size = min(int(round(num_items * t / total)), num_items - start)
+        sizes[w] = size
+        start += size
+    return sizes
 
 
 @dataclass(frozen=True)
@@ -297,17 +328,9 @@ class OracleStaticScheduler:
 
     def __init__(self, num_items: int, throughputs: Dict[str, float]) -> None:
         self.num_items = num_items
-        total = sum(throughputs.values())
         self._assignments: Dict[str, Optional[Chunk]] = {}
         start = 0
-        items = list(throughputs.items())
-        for i, (w, t) in enumerate(items):
-            if i == len(items) - 1:
-                size = num_items - start
-            else:
-                # clamp so rounding can never overshoot the space and leave
-                # the last worker a negative remainder
-                size = min(int(round(num_items * t / total)), num_items - start)
+        for w, size in proportional_split(num_items, throughputs).items():
             self._assignments[w] = Chunk(start, start + size, w) if size > 0 else None
             start += size
 

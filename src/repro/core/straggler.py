@@ -69,14 +69,24 @@ class StragglerDetector:
         med = _median(list(self._ewma.values()))
         ratios = {g: v / max(med, 1e-12) for g, v in self._ewma.items()}
         stragglers = []
-        for g, r in ratios.items():
-            if r > self.threshold:
+        # Breach counters move only for groups observed *this* call: the
+        # engine feeds one completion at a time, and a unit must not
+        # accumulate breaches while it is idle just because others finish.
+        for g in step_times:
+            if ratios.get(g, 0.0) > self.threshold:
                 self._breaches[g] = self._breaches.get(g, 0) + 1
             else:
                 self._breaches[g] = 0
-            if self._breaches.get(g, 0) >= self.patience:
+        for g, n in self._breaches.items():
+            if n >= self.patience:
                 stragglers.append(g)
         return StragglerReport(stragglers=sorted(stragglers), ratios=ratios, median_step_time=med)
+
+    def forget(self, group: str) -> None:
+        """Stop tracking ``group`` (e.g. after it was quarantined) so its
+        stale EWMA no longer skews the fleet median."""
+        self._ewma.pop(group, None)
+        self._breaches.pop(group, None)
 
 
 class StragglerMitigator:

@@ -173,6 +173,13 @@ class CostAwarePolicy(AdmissionPolicy):
     seconds-per-token, so a persistently slow prefill unit (a thermally
     throttled core, a congested remote worker) is reported rather than
     silently averaged away.
+
+    Pass ``cost_model=`` (a :class:`~repro.core.costmodel.CostModel`) to
+    share capability descriptors with the batch runtime: prefill
+    observations land in the model under ``kernel`` (default
+    ``"prefill"``) and predictions use its persisted fleet throughput
+    when available — a restarted server starts cost-aware instead of
+    shortest-prompt-first.
     """
 
     name = "cost"
@@ -183,22 +190,40 @@ class CostAwarePolicy(AdmissionPolicy):
         max_queue: Optional[int] = None,
         tracker: Optional[ThroughputTracker] = None,
         detector: Optional[StragglerDetector] = None,
+        cost_model=None,
+        kernel: str = "prefill",
     ) -> None:
         super().__init__(max_queue=max_queue)
         self.tracker = tracker or ThroughputTracker()
         self.detector = detector or StragglerDetector()
         self.straggler_report: Optional[StragglerReport] = None
+        # Optional shared repro.core.costmodel.CostModel: the same store a
+        # HeteroRuntime learns batch splits from.  Observations flow both
+        # ways — prefills teach it under ``kernel``, predictions prefer
+        # its fleet throughput over the policy-local tracker, and the
+        # model's persistence means a restarted server predicts from day
+        # one instead of re-warming.
+        self.cost_model = cost_model
+        self.kernel = kernel
 
     def observe_prefill(self, unit: str, tokens: int, elapsed: float) -> None:
         tokens = max(int(tokens), 1)
         self.tracker.update("prefill", tokens, elapsed)
         self.tracker.update(unit, tokens, elapsed)
+        if self.cost_model is not None:
+            self.cost_model.observe(unit, self.kernel,
+                                    items=tokens, elapsed=elapsed)
         self.straggler_report = self.detector.observe(
             {unit: elapsed / tokens}
         )
 
     def predicted_cost(self, req) -> float:
-        return len(req.prompt) / self.tracker.get("prefill", 1.0)
+        tp = None
+        if self.cost_model is not None:
+            tp = self.cost_model.fleet_throughput(self.kernel)
+        if tp is None:
+            tp = self.tracker.get("prefill", 1.0)
+        return len(req.prompt) / tp
 
     def order(self, requests: Sequence, *, now: float = 0.0) -> List:
         return sorted(requests, key=self.predicted_cost)

@@ -1,0 +1,543 @@
+"""Online cost model + learned policy + straggler quarantine (ISSUE 7).
+
+The contracts under test:
+
+* **Convergence battery** (the tentpole's acceptance): on randomized
+  heterogeneous unit fleets under :class:`SimulatedClock`, one cold
+  ``policy="learned"`` warmup run teaches the attached
+  :class:`CostModel` each unit's true speed, and the second learned run
+  pre-splits within 10% of ``policy="oracle"`` — with exact-once
+  coverage and monotone events on every seed.
+* **Straggler quarantine**: a ThreadUnit that turns slow mid-run trips
+  the detector only after its configured consecutive breaches — never
+  on a single slow chunk — and the quarantine retire preserves
+  exact-once side effects under WallClock.  The last active unit is
+  never quarantined.
+* **Cost store round-trip**: save/load reproduces identical learned
+  splits; corrupted or version-mismatched JSON cold-starts with a
+  :class:`CostModelWarning` instead of raising.
+* **Shard merge**: ``s{k}/`` prefixed per-shard report keys fold onto
+  the physical unit name — one unit never fragments into phantom
+  entries, for throughput and for dispatch latency alike.
+"""
+
+import json
+import random
+import threading
+import time
+import warnings
+
+import pytest
+
+from repro.core import (
+    CostEntry,
+    CostModel,
+    CostModelWarning,
+    HeteroRuntime,
+    ShardedSpace,
+    SimulatedClock,
+    StragglerDetector,
+    WorkerKind,
+)
+from repro.core.costmodel import STORE_SCHEMA, base_unit_name
+from repro.core.runtime import POLICIES
+from repro.core.scheduler import proportional_split
+
+
+def assert_exact_tiling(spans, n_items):
+    assert spans, "no chunks completed"
+    assert spans[0][0] == 0
+    assert spans[-1][1] == n_items
+    for (a, b), (c, d) in zip(spans, spans[1:]):
+        assert b == c, f"gap or overlap at {b}:{c}"
+
+
+def assert_monotone_events(report):
+    ts = [e["t"] for e in (report.events or [])]
+    assert ts == sorted(ts), f"events out of order: {ts}"
+
+
+def make_sim_runtime(speeds, kinds=None, model=None):
+    rt = HeteroRuntime(clock=SimulatedClock(), cost_model=model)
+    for name, speed in speeds.items():
+        kind = (kinds or {}).get(name, WorkerKind.CC)
+        rt.register_unit(name, kind, speed=speed)
+    return rt
+
+
+# ---------------------------------------------------------------------------
+# cost model unit behaviour
+# ---------------------------------------------------------------------------
+class TestCostModelUnit:
+    def test_first_observation_sets_throughput_exactly(self):
+        m = CostModel()
+        tp = m.observe("u0", "spmm", items=100, elapsed=2.0)
+        assert tp == pytest.approx(50.0)
+        entry = m.lookup("u0", "spmm")
+        assert entry.samples == 1 and entry.items == 100
+
+    def test_ewma_blends_subsequent_observations(self):
+        m = CostModel(alpha=0.5)
+        m.observe("u0", "k", items=100, elapsed=1.0)   # 100/s
+        tp = m.observe("u0", "k", items=200, elapsed=1.0)  # 200/s
+        assert tp == pytest.approx(150.0)
+
+    def test_lookup_returns_copy(self):
+        m = CostModel()
+        m.observe("u0", "k", items=10, elapsed=1.0)
+        m.lookup("u0", "k").throughput = 1e9
+        assert m.lookup("u0", "k").throughput == pytest.approx(10.0)
+
+    def test_kernels_are_independent(self):
+        m = CostModel()
+        m.observe("u0", "spmm", items=100, elapsed=1.0)
+        m.observe("u0", "hotspot", items=10, elapsed=1.0)
+        assert m.throughput("u0", "spmm") == pytest.approx(100.0)
+        assert m.throughput("u0", "hotspot") == pytest.approx(10.0)
+        assert m.kernels() == ["hotspot", "spmm"]
+
+    def test_speeds_and_coverage(self):
+        m = CostModel()
+        m.observe("u0", "k", items=50, elapsed=1.0)
+        assert m.speeds(["u0", "u1"], "k") == {"u0": pytest.approx(50.0)}
+        assert not m.coverage(["u0", "u1"], "k")
+        m.observe("u1", "k", items=25, elapsed=1.0)
+        assert m.coverage(["u0", "u1"], "k")
+
+    def test_fleet_throughput_mean(self):
+        m = CostModel()
+        assert m.fleet_throughput("k") is None
+        m.observe("u0", "k", items=100, elapsed=1.0)
+        m.observe("u1", "k", items=300, elapsed=1.0)
+        assert m.fleet_throughput("k") == pytest.approx(200.0)
+
+    def test_forget(self):
+        m = CostModel()
+        m.observe("u0", "a", items=10, elapsed=1.0)
+        m.observe("u0", "b", items=10, elapsed=1.0)
+        m.forget("u0", "a")
+        assert m.lookup("u0", "a") is None
+        assert m.lookup("u0", "b") is not None
+        m.forget("u0")
+        assert len(m) == 0
+
+    def test_invalid_inputs(self):
+        with pytest.raises(ValueError, match="alpha"):
+            CostModel(alpha=0.0)
+        m = CostModel()
+        with pytest.raises(ValueError, match="items"):
+            m.observe("u0", "k", items=0, elapsed=1.0)
+        with pytest.raises(ValueError, match="path"):
+            m.save()
+
+    def test_base_unit_name(self):
+        assert base_unit_name("s0/acc0") == "acc0"
+        assert base_unit_name("s12/cc3") == "cc3"
+        assert base_unit_name("acc0") == "acc0"
+        # only the shard namespace is stripped, nothing else
+        assert base_unit_name("shard/acc0") == "shard/acc0"
+        assert base_unit_name("s1x/acc0") == "s1x/acc0"
+
+
+class TestProportionalSplit:
+    def test_tiles_exactly(self):
+        sizes = proportional_split(1001, {"a": 3.0, "b": 1.0, "c": 1.0})
+        assert sum(sizes.values()) == 1001
+        assert sizes["a"] > sizes["b"]
+
+    def test_rejects_degenerate(self):
+        with pytest.raises(ValueError):
+            proportional_split(10, {})
+        with pytest.raises(ValueError):
+            proportional_split(10, {"a": 0.0})
+
+
+def test_learned_is_last_policy():
+    # property batteries elsewhere draw from POLICIES[pick % 3]; the three
+    # cost-free policies must keep their indices
+    assert POLICIES[:3] == ("multidynamic", "static", "oracle")
+    assert POLICIES[-1] == "learned"
+
+
+# ---------------------------------------------------------------------------
+# the tentpole: seeded convergence battery
+# ---------------------------------------------------------------------------
+class TestLearnedConvergenceBattery:
+    """>=30 seeds: learned within 10% of oracle after one warmup run."""
+
+    N_SEEDS = 32
+    N_ITEMS = 2048
+
+    def _fleet(self, rng):
+        n_units = rng.randrange(2, 6)
+        speeds, kinds = {}, {}
+        for i in range(n_units):
+            acc = rng.random() < 0.5
+            name = f"{'acc' if acc else 'cc'}{i}"
+            kinds[name] = WorkerKind.ACC if acc else WorkerKind.CC
+            speeds[name] = (rng.uniform(40.0, 400.0) if acc
+                            else rng.uniform(5.0, 50.0))
+        return speeds, kinds
+
+    @pytest.mark.parametrize("seed", range(N_SEEDS))
+    def test_learned_converges_to_oracle(self, seed):
+        rng = random.Random(seed)
+        speeds, kinds = self._fleet(rng)
+        model = CostModel()
+        rt = make_sim_runtime(speeds, kinds, model=model)
+
+        warmup = rt.parallel_for(num_items=self.N_ITEMS, policy="learned",
+                                 acc_chunk=64)
+        learned = rt.parallel_for(num_items=self.N_ITEMS, policy="learned",
+                                  acc_chunk=64)
+        oracle = rt.parallel_for(num_items=self.N_ITEMS, policy="oracle",
+                                 acc_chunk=64)
+
+        for rep in (warmup, learned, oracle):
+            assert rep.items == self.N_ITEMS
+            assert_exact_tiling(rep.coverage, self.N_ITEMS)
+            assert_monotone_events(rep)
+        # the acceptance number: within 10% of oracle after one warmup
+        assert learned.makespan <= 1.10 * oracle.makespan, (
+            f"seed {seed}: learned {learned.makespan:.4f} vs "
+            f"oracle {oracle.makespan:.4f}"
+        )
+        # the warm run is a pre-split: at most one chunk per unit
+        assert learned.chunks <= len(speeds)
+        # under SimulatedClock items/busy IS the registered speed, so the
+        # model must have recovered ground truth
+        for name, speed in speeds.items():
+            assert model.throughput(name, "default") == pytest.approx(
+                speed, rel=1e-6
+            ), f"seed {seed}: model missed {name}"
+
+    def test_cold_learned_run_completes_without_model(self):
+        # no cost model attached: learned degrades to the adaptive policy
+        rt = make_sim_runtime({"a": 50.0, "b": 10.0})
+        rep = rt.parallel_for(num_items=500, policy="learned", acc_chunk=16)
+        assert rep.items == 500
+        assert_exact_tiling(rep.coverage, 500)
+
+    def test_learned_ignores_registered_speeds(self):
+        # deliberately wrong priors: the learned split must follow the
+        # *measured* speeds, not the registered ones
+        model = CostModel()
+        rt = HeteroRuntime(clock=SimulatedClock(), cost_model=model)
+        rt.register_unit("a", WorkerKind.CC, speed=100.0)
+        rt.register_unit("b", WorkerKind.CC, speed=100.0)
+        # teach the model a 3:1 reality that contradicts the 1:1 priors
+        model.observe("a", "default", items=300, elapsed=1.0)
+        model.observe("b", "default", items=100, elapsed=1.0)
+        plan = rt.plan(400, policy="learned")
+        assert plan["a"] == (0, 300)
+        assert plan["b"] == (300, 400)
+
+    def test_partial_coverage_falls_back_to_adaptive(self):
+        model = CostModel()
+        rt = make_sim_runtime({"a": 50.0, "b": 10.0}, model=model)
+        model.observe("a", "default", items=100, elapsed=1.0)  # only one unit
+        rep = rt.parallel_for(num_items=500, policy="learned", acc_chunk=16)
+        assert rep.items == 500
+        assert_exact_tiling(rep.coverage, 500)
+        # adaptive fallback issues many chunks, not a pre-split
+        assert rep.chunks > 2
+
+    def test_kernel_keys_select_independent_models(self):
+        model = CostModel()
+        rt = make_sim_runtime({"a": 80.0, "b": 20.0}, model=model)
+        rt.parallel_for(num_items=1000, policy="learned", acc_chunk=32,
+                        kernel="spmm")
+        # a different kernel is still cold -> adaptive, same kernel is warm
+        warm = rt.parallel_for(num_items=1000, policy="learned", acc_chunk=32,
+                               kernel="spmm")
+        cold = rt.parallel_for(num_items=1000, policy="learned", acc_chunk=32,
+                               kernel="hotspot")
+        assert warm.chunks <= 2
+        assert cold.chunks > 2
+
+
+# ---------------------------------------------------------------------------
+# straggler quarantine (wall clock, real threads)
+# ---------------------------------------------------------------------------
+class Recorder:
+    """Exact-once side-effect recorder shared across worker threads."""
+
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.done = {}
+        self.chunk_counts = {}
+
+    def work(self, per_item_fast, slow_unit, per_item_slow, slow_after):
+        def fn(chunk):
+            with self.lock:
+                self.chunk_counts[chunk.worker] = (
+                    self.chunk_counts.get(chunk.worker, 0) + 1)
+                k = self.chunk_counts[chunk.worker]
+            per_item = per_item_fast
+            if chunk.worker == slow_unit and k > slow_after:
+                per_item = per_item_slow
+            time.sleep(per_item * chunk.size)
+            with self.lock:
+                for i in chunk.indices():
+                    self.done[i] = self.done.get(i, 0) + 1
+        return fn
+
+    def assert_exact_once(self, n_items):
+        assert sorted(self.done) == list(range(n_items))
+        assert all(v == 1 for v in self.done.values())
+
+
+class TestStragglerQuarantine:
+    N_ITEMS = 2000
+
+    def _run(self, work_fn, detector, n_items=N_ITEMS):
+        rt = HeteroRuntime()
+        for n in ("u0", "u1", "u2"):
+            rt.register_unit(n, WorkerKind.CC)
+        return rt.parallel_for(
+            work_fn, num_items=n_items, policy="multidynamic", acc_chunk=8,
+            scheduler_kwargs=dict(min_cc_chunk=8, max_cc_chunk=8),
+            straggler=detector,
+        )
+
+    def test_sustained_slowdown_trips_after_patience(self):
+        rec = Recorder()
+        # u2 turns 20x slow after 2 warm chunks; alpha=0.6/threshold=6/
+        # patience=3 convicts on its 3rd consecutive slow completion
+        det = StragglerDetector(alpha=0.6, threshold=6.0, patience=3)
+        rep = self._run(rec.work(0.0003, "u2", 0.006, slow_after=2), det)
+        straggled = [e for e in (rep.events or [])
+                     if e["action"] == "straggler"]
+        assert [e["unit"] for e in straggled] == ["u2"]
+        assert straggled[0]["ratio"] > 6.0
+        # conviction needed patience consecutive breaches: 2 warm + 3 slow
+        assert rep.per_worker_chunks["u2"] == 5
+        rec.assert_exact_once(self.N_ITEMS)
+        assert_exact_tiling(rep.coverage, self.N_ITEMS)
+        assert_monotone_events(rep)
+        # quarantined unit does no further work; survivors cover the rest
+        assert rep.per_worker_items["u0"] > rep.per_worker_items["u2"]
+
+    def test_single_slow_chunk_never_trips(self):
+        rec = Recorder()
+        det = StragglerDetector(alpha=0.6, threshold=6.0, patience=3)
+
+        fast = rec.work(0.0003, "none", 0.0003, slow_after=0)
+
+        def one_spike(chunk):
+            with rec.lock:
+                k = rec.chunk_counts.get(chunk.worker, 0)
+            if chunk.worker == "u2" and k == 2:
+                time.sleep(0.006 * chunk.size)  # exactly one slow chunk
+                with rec.lock:
+                    rec.chunk_counts[chunk.worker] = k + 1
+                with rec.lock:
+                    for i in chunk.indices():
+                        rec.done[i] = rec.done.get(i, 0) + 1
+                return
+            fast(chunk)
+
+        rep = self._run(one_spike, det, n_items=1200)
+        assert not [e for e in (rep.events or [])
+                    if e["action"] == "straggler"]
+        rec.assert_exact_once(1200)
+        # the spiked unit kept working after its one bad chunk
+        assert rep.per_worker_chunks["u2"] > 3
+
+    def test_last_active_unit_is_never_quarantined(self):
+        # a single unit is always "slow" relative to itself with a
+        # sub-1.0 threshold, but quarantining it would stall the run
+        rt = HeteroRuntime()
+        rt.register_unit("only", WorkerKind.CC)
+        det = StragglerDetector(alpha=0.6, threshold=0.5, patience=1)
+        rec = Recorder()
+        rep = rt.parallel_for(
+            rec.work(0.0002, "none", 0.0002, slow_after=0),
+            num_items=200, policy="multidynamic", acc_chunk=8,
+            scheduler_kwargs=dict(min_cc_chunk=8, max_cc_chunk=8),
+            straggler=det,
+        )
+        assert not [e for e in (rep.events or [])
+                    if e["action"] == "straggler"]
+        rec.assert_exact_once(200)
+
+    def test_detector_forgotten_unit_stops_skewing_median(self):
+        det = StragglerDetector(alpha=1.0, threshold=2.0, patience=1)
+        det.observe({"slow": 10.0})
+        det.observe({"a": 1.0})
+        det.observe({"b": 1.0})
+        det.forget("slow")
+        rep = det.observe({"a": 1.0})
+        assert rep.median_step_time == pytest.approx(1.0)
+        assert "slow" not in rep.ratios
+
+    def test_breaches_count_only_observed_groups(self):
+        # other units completing must not advance a slow unit's breach
+        # count while it is idle: conviction needs patience *of its own*
+        # observations
+        det = StragglerDetector(alpha=1.0, threshold=2.0, patience=3)
+        det.observe({"fast1": 1.0})
+        det.observe({"fast2": 1.0})
+        det.observe({"slow": 10.0})  # breach 1
+        for _ in range(10):          # idle slow unit; fast units churn
+            assert det.observe({"fast1": 1.0}).stragglers == []
+        det.observe({"slow": 10.0})  # breach 2
+        assert det.observe({"slow": 10.0}).stragglers == ["slow"]  # breach 3
+
+    def test_straggler_rejected_off_interrupt_engine(self):
+        det = StragglerDetector()
+        rt = make_sim_runtime({"a": 10.0, "b": 10.0})
+        with pytest.raises(ValueError, match="SimulatedClock"):
+            rt.parallel_for(num_items=100, policy="multidynamic",
+                            acc_chunk=8, straggler=det)
+        wall = HeteroRuntime()
+        wall.register_unit("a", WorkerKind.CC)
+        with pytest.raises(ValueError, match="interrupt"):
+            wall.parallel_for(lambda c: None, num_items=100,
+                              engine="inline", straggler=det)
+
+    def test_straggler_rejected_on_sharded_space(self):
+        det = StragglerDetector()
+        rt = HeteroRuntime()
+        rt.register_unit("a", WorkerKind.CC)
+        rt.register_unit("b", WorkerKind.CC)
+        with pytest.raises(ValueError, match="shard"):
+            rt.parallel_for(lambda c: None, space=ShardedSpace(100, 2),
+                            engine="interrupt", straggler=det)
+
+
+# ---------------------------------------------------------------------------
+# persistence: versioned store round-trip + corruption fallback
+# ---------------------------------------------------------------------------
+class TestCostStore:
+    SPEEDS = {"acc0": 120.0, "cc0": 15.0, "cc1": 45.0}
+
+    def _warm_model(self, path=None):
+        model = CostModel(path=path)
+        rt = make_sim_runtime(self.SPEEDS, model=model)
+        rt.parallel_for(num_items=1024, policy="learned", acc_chunk=32,
+                        kernel="spmm")
+        return model
+
+    def test_round_trip_reproduces_identical_splits(self, tmp_path):
+        store = tmp_path / "cost.json"
+        model = self._warm_model(str(store))
+        model.save()
+
+        rt_live = make_sim_runtime(self.SPEEDS, model=model)
+        rt_loaded = make_sim_runtime(self.SPEEDS,
+                                     model=CostModel(str(store)))
+        kwargs = dict(policy="learned", acc_chunk=32, kernel="spmm")
+        assert rt_live.plan(4096, **kwargs) == rt_loaded.plan(4096, **kwargs)
+
+    def test_loaded_model_presplits_immediately(self, tmp_path):
+        store = tmp_path / "cost.json"
+        self._warm_model(str(store)).save()
+        rt = make_sim_runtime(self.SPEEDS, model=CostModel(str(store)))
+        rep = rt.parallel_for(num_items=4096, policy="learned", acc_chunk=32,
+                              kernel="spmm")
+        assert rep.chunks <= len(self.SPEEDS)  # warm across runs, no re-warmup
+        assert_exact_tiling(rep.coverage, 4096)
+
+    def test_save_is_versioned_and_sorted(self, tmp_path):
+        store = tmp_path / "cost.json"
+        model = self._warm_model()
+        model.save(str(store))
+        doc = json.loads(store.read_text())
+        assert doc["schema"] == STORE_SCHEMA
+        units = [e["unit"] for e in doc["entries"]]
+        assert units == sorted(units)
+        assert not any(u.startswith("s0/") for u in units)
+
+    def test_corrupted_store_warns_and_cold_starts(self, tmp_path):
+        store = tmp_path / "cost.json"
+        store.write_text("{ this is not json")
+        with pytest.warns(CostModelWarning, match="cold-start"):
+            model = CostModel(str(store))
+        assert len(model) == 0
+        # cold model still runs (adaptive fallback), then learns normally
+        rt = make_sim_runtime(self.SPEEDS, model=model)
+        rep = rt.parallel_for(num_items=512, policy="learned", acc_chunk=32)
+        assert rep.items == 512
+        assert model.coverage(list(self.SPEEDS), "default")
+
+    def test_version_mismatch_warns_and_cold_starts(self, tmp_path):
+        store = tmp_path / "cost.json"
+        store.write_text(json.dumps({
+            "schema": "costmodel/v0",
+            "entries": [{"unit": "acc0", "kernel": "k", "throughput": 10.0}],
+        }))
+        with pytest.warns(CostModelWarning, match="costmodel/v0"):
+            model = CostModel(str(store))
+        assert len(model) == 0
+
+    def test_missing_store_is_silent_cold_start(self, tmp_path):
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            model = CostModel(str(tmp_path / "absent.json"))
+        assert len(model) == 0
+
+    def test_save_then_load_preserves_latency_fields(self, tmp_path):
+        store = tmp_path / "cost.json"
+        model = CostModel(str(store))
+        model.observe("u0", "k", items=10, elapsed=1.0)
+        model.observe_latency("u0", "k", dispatch=0.002, wire=0.001)
+        model.save()
+        loaded = CostModel(str(store)).lookup("u0", "k")
+        assert loaded.dispatch_latency == pytest.approx(0.002)
+        assert loaded.wire_latency == pytest.approx(0.001)
+
+
+# ---------------------------------------------------------------------------
+# shard-prefix merge: one physical unit, never k phantom entries
+# ---------------------------------------------------------------------------
+class TestShardMerge:
+    def test_simulated_sharded_run_learns_unprefixed_units(self):
+        speeds = {"acc0": 100.0, "cc0": 20.0}
+        model = CostModel()
+        rt = make_sim_runtime(speeds, model=model)
+        rep = rt.parallel_for(num_items=0, space=ShardedSpace(2000, 2),
+                              policy="multidynamic", acc_chunk=32)
+        # the report itself is shard-prefixed ...
+        assert any(k.startswith("s0/") for k in rep.per_worker_items)
+        # ... but the model keys are physical units, and each unit's
+        # learned throughput is its true speed (items and busy summed
+        # across shards before the ratio)
+        assert {e.unit for e in model.entries()} == set(speeds)
+        for name, speed in speeds.items():
+            assert model.throughput(name, "default") == pytest.approx(
+                speed, rel=1e-6)
+
+    def test_wall_sharded_run_merges_dispatch_latency_unprefixed(self):
+        model = CostModel()
+        rt = HeteroRuntime(cost_model=model)
+        for n in ("u0", "u1"):
+            rt.register_unit(n, WorkerKind.CC,
+                             work_fn=lambda c: time.sleep(0.0002 * c.size))
+        rep = rt.parallel_for(num_items=0, space=ShardedSpace(240, 2),
+                              policy="multidynamic", acc_chunk=8,
+                              engine="interrupt", backend="threads")
+        assert any(k.startswith("s") for k in (rep.dispatch_latency or {}))
+        entries = {e.unit: e for e in model.entries()}
+        assert set(entries) == {"u0", "u1"}
+        for e in entries.values():
+            assert e.dispatch_latency is not None and e.dispatch_latency >= 0
+
+    def test_observe_report_merges_prefixed_maps_directly(self):
+        class FakeReport:
+            per_worker_items = {"s0/acc0": 100, "s1/acc0": 300, "s1/cc0": 50}
+            per_worker_busy = {"s0/acc0": 1.0, "s1/acc0": 3.0, "s1/cc0": 5.0}
+            dispatch_latency = {"s0/acc0": 0.004, "s1/acc0": 0.002}
+            wire_latency = None
+            events = None
+
+        model = CostModel()
+        model.observe_report(FakeReport(), kernel="k")
+        assert {e.unit for e in model.entries()} == {"acc0", "cc0"}
+        # (100 + 300) items over (1 + 3) seconds, one observation
+        assert model.throughput("acc0", "k") == pytest.approx(100.0)
+        assert model.throughput("cc0", "k") == pytest.approx(10.0)
+        # latencies average across the shard replicas that sampled
+        assert model.lookup("acc0", "k").dispatch_latency == pytest.approx(
+            0.003)
+        assert model.lookup("cc0", "k").dispatch_latency is None

@@ -1,9 +1,11 @@
-"""Validate a committed ``BENCH_serving.json`` artifact.
+"""Validate a committed benchmark artifact (dispatches on ``schema``).
 
     python tools/check_bench.py BENCH_serving.json [--require-continuous-wins]
+    python tools/check_bench.py BENCH_costmodel.json [--max-gap 0.10]
 
-Checks (all structural, so they hold for the *committed* artifact and
-for a fresh ``benchmarks/bench_serving.py --loadgen --json`` run alike):
+``bench_serving/v1`` checks (structural, so they hold for the
+*committed* artifact and for a fresh ``benchmarks/bench_serving.py
+--loadgen --json`` run alike):
 
 * ``schema`` is exactly ``bench_serving/v1``;
 * ``scenario`` and ``engine`` blocks are present and seeded;
@@ -18,6 +20,17 @@ for a fresh ``benchmarks/bench_serving.py --loadgen --json`` run alike):
   CI applies this flag to the committed artifact (deterministic) and
   only schema-checks the fresh smoke run (hosted runners are too noisy
   to gate an ordering on a single quick run).
+
+``bench_costmodel/v1`` checks (``benchmarks/table1_eneac.py
+--costmodel``; the run is SimulatedClock-deterministic, so the gate
+applies to fresh runs and the committed artifact alike):
+
+* every config entry carries ``seed``/``units``/the three makespans and
+  a ``gap`` consistent with ``learned_makespan / oracle_makespan - 1``;
+* seeds are unique and ``max_gap``/``mean_gap`` match the entries;
+* every per-seed ``gap`` is ≤ ``--max-gap`` (default 0.10) — the
+  acceptance number: learned splits within 10% of oracle after one
+  warmup run.
 
 Exit code 0 on success, 1 with a diagnostic on any violation.
 """
@@ -37,6 +50,62 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from repro.serving.loadgen import METRIC_KEYS  # noqa: E402
 
 SCHEMA = "bench_serving/v1"
+COSTMODEL_SCHEMA = "bench_costmodel/v1"
+
+
+def check_costmodel(doc: dict, *, max_gap: float = 0.10) -> list:
+    """Return violation strings for a ``bench_costmodel/v1`` artifact."""
+    errs = []
+    if doc.get("schema") != COSTMODEL_SCHEMA:
+        errs.append(f"schema is {doc.get('schema')!r}, want {COSTMODEL_SCHEMA!r}")
+    if not isinstance(doc.get("params"), dict):
+        errs.append("missing 'params' block")
+    configs = doc.get("configs")
+    if not isinstance(configs, list) or not configs:
+        return errs + ["configs must be a non-empty list"]
+
+    seeds = []
+    gaps = []
+    for i, entry in enumerate(configs):
+        ok = True
+        for field in ("seed", "units", "warmup_makespan", "learned_makespan",
+                      "oracle_makespan", "gap"):
+            if field not in entry:
+                errs.append(f"configs[{i}] missing {field!r}")
+                ok = False
+        if not ok:
+            continue
+        if not isinstance(entry["units"], dict) or not entry["units"]:
+            errs.append(f"configs[{i}] units must be a non-empty dict")
+            continue
+        seeds.append(entry["seed"])
+        oracle = entry["oracle_makespan"]
+        if not oracle > 0:
+            errs.append(f"configs[{i}] oracle_makespan must be positive")
+            continue
+        implied = entry["learned_makespan"] / oracle - 1.0
+        if abs(implied - entry["gap"]) > 1e-9:
+            errs.append(
+                f"configs[{i}] gap {entry['gap']:.6f} inconsistent with "
+                f"makespans (implied {implied:.6f})"
+            )
+        gaps.append(entry["gap"])
+        if entry["gap"] > max_gap:
+            errs.append(
+                f"configs[{i}] (seed {entry['seed']}): learned is "
+                f"{entry['gap']:.2%} over oracle, budget {max_gap:.0%}"
+            )
+    if len(set(seeds)) != len(seeds):
+        errs.append("duplicate seeds in configs")
+    if gaps:
+        for field, value in (("max_gap", max(gaps)),
+                             ("mean_gap", sum(gaps) / len(gaps))):
+            if field in doc and abs(doc[field] - value) > 1e-9:
+                errs.append(
+                    f"{field} {doc[field]:.6f} inconsistent with configs "
+                    f"({value:.6f})"
+                )
+    return errs
 
 
 def check(doc: dict, *, require_continuous_wins: bool = False) -> list:
@@ -94,20 +163,27 @@ def check(doc: dict, *, require_continuous_wins: bool = False) -> list:
 
 def main(argv: list) -> int:
     ap = argparse.ArgumentParser(
-        description="Validate a BENCH_serving.json artifact")
+        description="Validate a committed benchmark artifact")
     ap.add_argument("path", help="artifact to validate")
     ap.add_argument("--require-continuous-wins", action="store_true",
-                    help="fail unless continuous beats static on goodput "
-                         "for every (policy, backend) pair")
+                    help="bench_serving: fail unless continuous beats static "
+                         "on goodput for every (policy, backend) pair")
+    ap.add_argument("--max-gap", type=float, default=0.10,
+                    help="bench_costmodel: per-seed learned-vs-oracle "
+                         "makespan budget (default 0.10)")
     args = ap.parse_args(argv)
     with open(args.path) as fh:
         doc = json.load(fh)
-    errs = check(doc, require_continuous_wins=args.require_continuous_wins)
+    schema = doc.get("schema")
+    if schema == COSTMODEL_SCHEMA:
+        errs = check_costmodel(doc, max_gap=args.max_gap)
+    else:
+        errs = check(doc, require_continuous_wins=args.require_continuous_wins)
     for e in errs:
         print(f"check_bench: {e}", file=sys.stderr)
     if not errs:
         n = len(doc.get("configs", []))
-        print(f"check_bench: OK — {n} configs, schema {SCHEMA}")
+        print(f"check_bench: OK — {n} configs, schema {schema}")
     return 1 if errs else 0
 
 
