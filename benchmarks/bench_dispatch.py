@@ -1,0 +1,207 @@
+"""Dispatch fast-path microbenchmark (ISSUE 8): per-chunk dispatch cost
+through a :class:`~repro.core.transport.RemoteUnit` with the fast-path
+knobs toggled — session-cached work descriptors (``fn_cache``) and
+chunk-batched frames (``batch_frames``) — against the PR-7 baseline
+(inline fn pickling, one frame per chunk).
+
+Three transports x three modes:
+
+* transports: ``loopback`` (in-process queue pair), ``socket`` (real TCP
+  through an in-process :class:`WorkerServer`), ``flaky`` (seeded
+  drop/dup/reorder injection over loopback — the fast path must stay
+  fast *and* correct when frames need retransmits);
+* modes: ``baseline`` (fn_cache off, batch_frames=1 — the pre-fast-path
+  wire protocol), ``cached`` (descriptor cache on, unbatched),
+  ``batched`` (cache on, ``batch_frames`` chunks per frame).
+
+The work function carries a ~4 KiB payload attribute so the baseline
+pays the real per-frame descriptor pickling cost the cache elides.  Per
+config we report median-of-repeats ``chunks_per_sec``, the amortized
+``dispatch_us`` (wall clock per chunk — the number batching must lower),
+the raw per-chunk ``submit_latency_us`` (which legitimately *rises*
+under batching as chunks pipeline behind their batch siblings) and the
+per-chunk ``wire_us`` attribution from the unit's latency ledgers, plus
+a ``speedups`` block (batched-vs-baseline chunks_per_sec per transport).
+
+    PYTHONPATH=src python benchmarks/bench_dispatch.py --json BENCH_dispatch.json
+    PYTHONPATH=src python benchmarks/bench_dispatch.py --quick --json /tmp/smoke.json
+
+``tools/check_bench.py --schema bench_dispatch/v1`` validates the
+artifact; CI additionally gates the committed one on a >=2x socket
+speedup (the ISSUE's acceptance line).
+"""
+
+from __future__ import annotations
+
+import json
+import statistics
+import time
+from typing import Dict, List, Optional
+
+from repro.core.backends import CompletionBus
+from repro.core.scheduler import Chunk
+from repro.core.transport import (
+    FlakyTransport,
+    LoopbackTransport,
+    RemoteUnit,
+    RemoteWorker,
+    WorkerServer,
+)
+
+BENCH_SCHEMA = "bench_dispatch/v1"
+
+MODES = (
+    # (mode, fn_cache, batched) — batch_frames filled in from params
+    ("baseline", False, False),
+    ("cached", True, False),
+    ("batched", True, True),
+)
+TRANSPORTS = ("loopback", "socket", "flaky")
+
+
+class DispatchWork:
+    """Trivial per-chunk work with a deliberately chunky pickle.
+
+    The payload models a real work descriptor (closure constants, kernel
+    params): ~4 KiB that the baseline protocol re-pickles onto every
+    frame and the descriptor cache ships exactly once per session.
+    """
+
+    def __init__(self, payload_bytes: int) -> None:
+        self.payload = b"\x5a" * payload_bytes
+
+    def __call__(self, chunk) -> int:
+        return chunk.stop - chunk.start
+
+
+def _make_unit(transport: str, name: str, *, mode_batch: int,
+               fn_cache: bool, seed: int,
+               server: Optional[WorkerServer]) -> RemoteUnit:
+    if transport == "socket":
+        assert server is not None
+        return RemoteUnit(name, address=server.address,
+                          batch_frames=mode_batch, fn_cache=fn_cache)
+    client_end, worker_end = LoopbackTransport.pair()
+    client_side, worker_side = client_end, worker_end
+    if transport == "flaky":
+        faults = dict(drop=0.05, duplicate=0.05, reorder=0.10)
+        client_side = FlakyTransport(client_end, seed=seed, **faults)
+        worker_side = FlakyTransport(worker_end, seed=seed + 1, **faults)
+    worker = RemoteWorker(worker_side, poll_interval=0.05)
+    import threading
+
+    threading.Thread(target=worker.serve, daemon=True).start()
+    return RemoteUnit(name, transport=client_side, retry_interval=0.02,
+                      max_retries=600, batch_frames=mode_batch,
+                      fn_cache=fn_cache)
+
+
+def _drive(unit: RemoteUnit, n_chunks: int, work_fn) -> Dict[str, float]:
+    """Pump ``n_chunks`` through the unit, windowed at its capacity."""
+    bus = CompletionBus()
+    unit.start(bus)
+    try:
+        issued = done = 0
+        t0 = time.perf_counter()
+        while done < n_chunks:
+            while issued < n_chunks and issued - done < unit.capacity:
+                unit.submit(Chunk(issued, issued + 1, unit.name), work_fn)
+                issued += 1
+            unit.flush()
+            if not bus.wait(timeout=60.0):
+                raise RuntimeError(f"unit {unit.name}: completions stalled "
+                                   f"at {done}/{n_chunks}")
+            for rec in bus.drain():
+                if rec.error is not None:
+                    raise rec.error
+                done += 1
+        wall = time.perf_counter() - t0
+    finally:
+        unit.close()
+    return {
+        "wall_s": wall,
+        "chunks_per_sec": n_chunks / max(wall, 1e-12),
+        # amortized cost of dispatching one chunk end-to-end — the number
+        # batching must lower (per-chunk *latency* legitimately rises as
+        # chunks pipeline behind batch siblings; that is submit_latency_us)
+        "dispatch_us": 1e6 * wall / n_chunks,
+        "submit_latency_us": 1e6 * statistics.fmean(unit.dispatch_latencies),
+        "wire_us": 1e6 * statistics.fmean(unit.wire_latencies),
+    }
+
+
+def run(*, quick: bool = False, seed: int = 0,
+        batch_frames: int = 8) -> dict:
+    n_chunks = 96 if quick else 512
+    repeats = 2 if quick else 5
+    payload_bytes = 4096
+    params = {
+        "n_chunks": n_chunks, "repeats": repeats,
+        "batch_frames": batch_frames, "payload_bytes": payload_bytes,
+        "seed": seed, "quick": quick,
+    }
+    server = WorkerServer().start()
+    configs: List[dict] = []
+    try:
+        for transport in TRANSPORTS:
+            for mode, fn_cache, batched in MODES:
+                bf = batch_frames if batched else 1
+                runs = []
+                for r in range(repeats):
+                    work = DispatchWork(payload_bytes)
+                    unit = _make_unit(
+                        transport, f"{transport[0]}{r}", mode_batch=bf,
+                        fn_cache=fn_cache,
+                        seed=seed * 101 + r * 13 + 1, server=server)
+                    runs.append(_drive(unit, n_chunks, work))
+                entry = {
+                    "transport": transport, "mode": mode,
+                    "fn_cache": fn_cache, "batch_frames": bf,
+                    "n_chunks": n_chunks,
+                }
+                for key in ("wall_s", "chunks_per_sec", "dispatch_us",
+                            "submit_latency_us", "wire_us"):
+                    entry[key] = statistics.median(r[key] for r in runs)
+                configs.append(entry)
+                print(f"  {transport:8s} {mode:8s}  "
+                      f"{entry['chunks_per_sec']:10.0f} chunks/s  "
+                      f"dispatch {entry['dispatch_us']:8.1f}us  "
+                      f"wire {entry['wire_us']:8.1f}us")
+    finally:
+        server.stop()
+
+    by_key = {(c["transport"], c["mode"]): c for c in configs}
+    speedups = {
+        t: (by_key[(t, "batched")]["chunks_per_sec"]
+            / max(by_key[(t, "baseline")]["chunks_per_sec"], 1e-12))
+        for t in TRANSPORTS
+    }
+    for t, s in speedups.items():
+        print(f"  {t:8s} batched/baseline speedup: {s:.2f}x")
+    return {"schema": BENCH_SCHEMA, "params": params,
+            "configs": configs, "speedups": speedups}
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small chunk count / fewer repeats (CI smoke)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--batch-frames", type=int, default=8,
+                    help="frames coalesced per work_batch in batched mode")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the bench_dispatch/v1 artifact here")
+    args = ap.parse_args()
+    result = run(quick=args.quick, seed=args.seed,
+                 batch_frames=args.batch_frames)
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(result, fh, indent=1, sort_keys=True)
+            fh.write("\n")
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -83,8 +83,11 @@ BACKENDS = ("inline", "thread", "process", "jax", "remote")
 # list it (tests pin this — an unknown spec must teach the valid ones).
 VALID_BACKEND_SPECS = (
     "'inline'", "'thread'/'threads'", "'process'/'processes'", "'jax'",
-    "'remote:<host:port>'",
+    "'remote:<host:port>' (optional '?batch_frames=N&fn_cache=0|1' suffix)",
 )
+
+# Dispatch fast-path knobs accepted in a remote spec's query string.
+REMOTE_SPEC_KNOBS = ("batch_frames", "fn_cache")
 
 
 class WorkerLost(ConnectionError):
@@ -115,32 +118,81 @@ class CompletionRecord:
 class CompletionBus:
     """The interrupt line of a run: backends post, the engine sleeps.
 
-    A condition variable + deque: ``post`` is called from backend worker
-    threads (or jax waiter threads), ``wait``/``drain`` from the single
-    dispatcher thread.  This is the wall-clock materialization of the
-    paper's per-accelerator interrupt — except one bus serves all units,
-    which is exactly what lets the dispatcher hand out the next chunk to
-    *whichever* unit finished first.
+    Sharded hot path: each unit posts into its own deque slot (append is
+    GIL-atomic, no shared lock) and raises a single shared
+    :class:`threading.Event` — only the first post after a drain pays the
+    notify, subsequent posts are a plain attribute check.  ``wait`` and
+    ``drain`` belong to the single consumer (the dispatcher thread); the
+    drain clears the event *before* sweeping the slots so a post racing
+    the sweep re-arms it and can never be silently lost.  This is the
+    wall-clock materialization of the paper's per-accelerator interrupt —
+    except one bus serves all units, which is exactly what lets the
+    dispatcher hand out the next chunk to *whichever* unit finished
+    first.
+
+    ``register(unit)`` pre-creates a unit's slot; posts from units that
+    never registered land in a shared default slot, so the API is
+    drop-in for the previous condition-variable bus.
     """
 
     def __init__(self) -> None:
-        self._cond = threading.Condition()
-        self._ready: deque = deque()
+        self._event = threading.Event()
+        self._lock = threading.Lock()          # slot registry only, not posts
+        self._default: deque = deque()
+        self._slots: Dict[str, deque] = {}
+        # copy-on-write scan tuple: producers may register new slots while
+        # the consumer sweeps, so the sweep iterates an immutable snapshot
+        self._scan: Tuple[deque, ...] = (self._default,)
+
+    def register(self, unit: str) -> None:
+        """Idempotently create a dedicated slot for ``unit``."""
+        with self._lock:
+            if unit not in self._slots:
+                self._slots[unit] = deque()
+                self._scan = tuple(self._slots.values()) + (self._default,)
 
     def post(self, rec: CompletionRecord) -> None:
-        with self._cond:
-            self._ready.append(rec)
-            self._cond.notify_all()
+        slot = self._slots.get(rec.unit)
+        if slot is None:
+            slot = self._default
+        slot.append(rec)
+        if not self._event.is_set():
+            self._event.set()
+
+    def _pending(self) -> bool:
+        for slot in self._scan:
+            if slot:
+                return True
+        return False
 
     def wait(self, timeout: Optional[float] = None) -> bool:
         """Sleep until at least one completion is pending (or timeout)."""
-        with self._cond:
-            return self._cond.wait_for(lambda: bool(self._ready), timeout=timeout)
+        deadline = None if timeout is None else time.perf_counter() + timeout
+        while True:
+            if self._pending():
+                return True
+            # Eat a stale set, then re-check: a producer appends *before*
+            # setting, so anything posted before the clear is visible to
+            # the re-check, and anything after it re-sets the event.
+            self._event.clear()
+            if self._pending():
+                return True
+            if deadline is None:
+                self._event.wait()
+            else:
+                remaining = deadline - time.perf_counter()
+                if remaining <= 0 or not self._event.wait(remaining):
+                    return self._pending()
 
     def drain(self) -> List[CompletionRecord]:
-        with self._cond:
-            out = list(self._ready)
-            self._ready.clear()
+        self._event.clear()
+        out: List[CompletionRecord] = []
+        for slot in self._scan:
+            while slot:
+                try:
+                    out.append(slot.popleft())
+                except IndexError:  # pragma: no cover - single-consumer guard
+                    break
         return out
 
 
@@ -149,12 +201,22 @@ class BackendUnit:
 
     Lifecycle: ``start(bus)`` before the first submit (re-startable, so
     one instance can serve consecutive runs), ``submit(chunk, work_fn)``
-    only while idle (the scheduler guarantees this), ``close()`` at run
-    end.  ``submit`` must not block on the work itself: completion is
-    reported by posting a :class:`CompletionRecord` to the bus.
+    only while the unit has spare :attr:`capacity` (the engine polices
+    this; plain units advertise ``capacity = 1``, i.e. one chunk in
+    flight), ``close()`` at run end.  ``submit`` must not block on the
+    work itself: completion is reported by posting a
+    :class:`CompletionRecord` to the bus.
+
+    Units that coalesce submissions (``capacity > 1``, e.g. a
+    :class:`~repro.core.transport.RemoteUnit` with ``batch_frames > 1``)
+    may buffer submits; the engine calls :meth:`flush` after each
+    dispatch round to push out a partial batch.  For everything else
+    ``flush`` is a no-op.
     """
 
     kind_name = "backend"
+    #: max chunks the engine may keep in flight on this unit at once
+    capacity = 1
 
     def __init__(self, name: str) -> None:
         self.name = name
@@ -164,10 +226,14 @@ class BackendUnit:
     # -- lifecycle ----------------------------------------------------------
     def start(self, bus: CompletionBus) -> None:
         self._bus = bus
+        bus.register(self.name)
         self.dispatch_latencies = []
 
     def submit(self, chunk: Chunk, work_fn: WorkFn) -> None:
         raise NotImplementedError
+
+    def flush(self) -> None:
+        """Push out any buffered submissions (no-op for unbatched units)."""
 
     def close(self) -> None:
         self._bus = None
@@ -463,13 +529,36 @@ def make_backend(spec: Union[str, BackendUnit, None], name: str) -> BackendUnit:
     text = str(spec)
     if text.startswith("remote:"):
         address = text[len("remote:"):]
+        opts: Dict[str, Any] = {}
+        if "?" in address:
+            address, _, query = address.partition("?")
+            for part in query.split("&"):
+                if not part:
+                    continue
+                key, _, value = part.partition("=")
+                if key not in REMOTE_SPEC_KNOBS:
+                    raise ValueError(
+                        f"unknown remote backend knob {key!r} in {spec!r}: "
+                        "valid knobs are " + ", ".join(REMOTE_SPEC_KNOBS)
+                    )
+                try:
+                    opts[key] = int(value)
+                except ValueError:
+                    raise ValueError(
+                        f"remote backend knob {key}={value!r} in {spec!r} "
+                        "must be an integer"
+                    ) from None
         if not address:
             raise ValueError(
                 "remote backend spec needs a worker address: "
                 "'remote:<host:port>'"
             )
         from .transport import RemoteUnit  # late: transport builds on this module
-        return RemoteUnit(name, address=address)
+        return RemoteUnit(
+            name, address=address,
+            batch_frames=opts.get("batch_frames", 1),
+            fn_cache=bool(opts.get("fn_cache", 1)),
+        )
     aliases = {
         "inline": InlineUnit,
         "thread": ThreadUnit, "threads": ThreadUnit,
@@ -541,7 +630,7 @@ class BackendEngine:
         self.events: List[dict] = []          # RunReport.events entries
         self._own_units = set()               # started here -> closed here
         self._all_units = dict(units)         # includes retired units (stats)
-        self._busy: set = set()
+        self._inflight: Dict[str, int] = {}   # unit -> chunks in flight
         self._leaving: set = set()
         self._straggled: set = set()
         self._errors: List[BaseException] = []
@@ -551,19 +640,39 @@ class BackendEngine:
     def _now(self) -> float:
         return time.perf_counter() - self._t0
 
+    def _any_busy(self) -> bool:
+        return any(self._inflight.values())
+
+    def _capacity(self, name: str) -> int:
+        unit = self.units.get(name)
+        return max(int(getattr(unit, "capacity", 1) or 1), 1)
+
     def _dispatch(self, name: str) -> bool:
-        if name in self._busy or name in self._leaving:
+        """Fill ``name`` up to its capacity, then flush its send buffer.
+
+        A ``capacity == 1`` unit behaves exactly as before: one chunk in
+        flight, the next issued only after its completion is processed.
+        A pipelined unit (e.g. RemoteUnit with ``batch_frames > 1``) is
+        handed up to ``capacity`` chunks back-to-back so it can coalesce
+        them into one wire frame; scheduler-visible granularity and
+        per-chunk completion accounting are unchanged.
+        """
+        if name in self._leaving or name in self.sched.removed:
             return False
-        if name in self.sched.removed:
-            return False
-        if self._errors:
-            return False
-        chunk = self.sched.next_chunk(name, now=time.perf_counter())
-        if chunk is None:
-            return False
-        self._busy.add(name)
-        self.units[name].submit(chunk, self.fns[name])
-        return True
+        issued = False
+        cap = self._capacity(name)
+        while self._inflight.get(name, 0) < cap:
+            if self._errors:
+                break
+            chunk = self.sched.next_chunk(name, now=time.perf_counter())
+            if chunk is None:
+                break
+            self._inflight[name] = self._inflight.get(name, 0) + 1
+            self.units[name].submit(chunk, self.fns[name])
+            issued = True
+        if issued:
+            self.units[name].flush()
+        return issued
 
     def _dispatch_idle(self) -> bool:
         any_issued = False
@@ -591,7 +700,7 @@ class BackendEngine:
                     "t": self._now(), "action": "leave", "unit": ev.unit,
                     "requeued": None,
                 })
-                if ev.unit in self._busy:
+                if self._inflight.get(ev.unit, 0):
                     # real work cannot be recalled: retire after completion
                     self._leaving.add(ev.unit)
                 else:
@@ -604,6 +713,9 @@ class BackendEngine:
                 self._own_units.add(ev.unit)
                 self.fns[ev.unit] = self.default_fn
                 self.sched.add_unit(ev.unit, ev.kind, throughput=ev.speed)
+                set_cap = getattr(self.sched, "set_capacity", None)
+                if set_cap is not None:
+                    set_cap(ev.unit, self._capacity(ev.unit))
                 self.events.append({
                     "t": self._now(), "action": "join", "unit": ev.unit,
                     "requeued": None,
@@ -622,13 +734,18 @@ class BackendEngine:
         Recorded as an ``action="lost"`` entry in ``RunReport.events``.
         """
         name = rec.unit
-        self._busy.discard(name)
+        already_lost = name not in self.units and name in self.sched.removed
+        self._inflight.pop(name, None)
         self._leaving.discard(name)
         if name not in self.sched.removed:
             self.sched.remove_unit(name)
         unit = self.units.pop(name, None)
         if unit is not None and name in self._own_units:
             unit.close()
+        if already_lost:
+            # a second WorkerLost for the same unit (e.g. a batched frame's
+            # failure posted per pending chunk): membership already handled
+            return
         self.events.append({
             "t": self._now(), "action": "lost", "unit": name,
             "requeued": (rec.chunk.start, rec.chunk.stop)
@@ -640,11 +757,19 @@ class BackendEngine:
             if isinstance(rec.error, WorkerLost):
                 self._lose_unit(rec)
                 continue
-            self._busy.discard(rec.unit)
-            self.sched.complete(rec.unit, rec.elapsed)
+            if rec.unit in self.sched.removed:
+                # completion raced a loss/retire whose in-flight span was
+                # already requeued; counting it now would double-cover
+                continue
+            n = self._inflight.get(rec.unit, 0)
+            if n > 1:
+                self._inflight[rec.unit] = n - 1
+            else:
+                self._inflight.pop(rec.unit, None)
+            self.sched.complete(rec.unit, rec.elapsed, chunk=rec.chunk)
             if rec.error is not None:
                 self._errors.append(rec.error)
-            if rec.unit in self._leaving:
+            if rec.unit in self._leaving and not self._inflight.get(rec.unit, 0):
                 self._retire(rec.unit)
             elif rec.error is None:
                 self._observe_straggler(rec)
@@ -679,21 +804,30 @@ class BackendEngine:
             "t": self._now(), "action": "straggler", "unit": name,
             "requeued": None, "ratio": report.ratios.get(name),
         })
-        self._retire(name)
+        if self._inflight.get(name, 0):
+            # pipelined unit with other chunks still executing: retiring now
+            # would requeue work that is in flight remotely (double
+            # execution).  Quarantine = stop feeding it; retire on drain.
+            self._leaving.add(name)
+        else:
+            self._retire(name)
         det.forget(name)
 
     # -- the loop -----------------------------------------------------------
     def run(self) -> float:
         """Drive the space to completion; returns the wall makespan."""
         self._t0 = time.perf_counter()
+        set_cap = getattr(self.sched, "set_capacity", None)
         for name, unit in self.units.items():
             unit.start(self.bus)
             self._own_units.add(name)
+            if set_cap is not None:
+                set_cap(name, self._capacity(name))
         try:
             self._apply_due_events()
             self._dispatch_idle()
             while True:
-                if self._busy:
+                if self._any_busy():
                     timeout = None
                     if self.pending:
                         timeout = max(self.pending[0].t - self._now(), 0.0)
@@ -707,7 +841,7 @@ class BackendEngine:
                 self._apply_due_events()
                 if self._dispatch_idle():
                     continue
-                if self._busy:
+                if self._any_busy():
                     continue
                 if (self.pending and not self._errors
                         and self.sched.items_done() < self.expected):

@@ -89,11 +89,16 @@ class RunReport:
     dispatch_latency: Optional[Dict[str, float]] = None
     # The wire + remote-queue component of dispatch_latency for units that
     # executed behind a transport (repro.core.transport.RemoteUnit): mean
-    # first-send -> remote-execution-start seconds per unit.  The local
-    # queue component is dispatch_latency[u] - wire_latency[u].  None when
-    # no remote unit took part in the run.  Measured by differencing
-    # client- and worker-side monotonic clocks, so only meaningful when
-    # both share a machine (worker subprocesses).
+    # first-send -> remote-execution-start seconds per unit.  When several
+    # chunks shared one work_batch frame (batch_frames > 1), the frame's
+    # transit time is attributed per chunk — divided by the number of
+    # chunks in the frame — so summing a batch's samples counts the wire
+    # hop exactly once instead of once per chunk; the remote queue wait
+    # remains genuinely per-chunk.  The local queue component is
+    # dispatch_latency[u] - wire_latency[u].  None when no remote unit
+    # took part in the run.  Measured by differencing client- and
+    # worker-side monotonic clocks, so only meaningful when both share a
+    # machine (worker subprocesses).
     wire_latency: Optional[Dict[str, float]] = None
 
     @property

@@ -171,7 +171,7 @@ class _FixedScheduler:
         self._assignments[worker] = None
         return chunk
 
-    def complete(self, worker: str, elapsed: float) -> None:
+    def complete(self, worker: str, elapsed: float, chunk=None) -> None:
         pass
 
 
@@ -204,8 +204,12 @@ class _TrackedScheduler:
         # pre-split policy serve only from the requeue buffer
         self._inner_known = set(unit_kinds)
         self._removed: set = set()
-        # outstanding: worker -> (global chunk, came_from_requeue)
-        self._outstanding: Dict[str, Tuple[Chunk, bool]] = {}
+        # outstanding: worker -> FIFO of (global chunk, came_from_requeue).
+        # Capacity-1 drivers keep at most one entry; a pipelined driver
+        # (BackendEngine over a batched RemoteUnit) may keep up to the
+        # unit's declared capacity — see set_capacity().
+        self._outstanding: Dict[str, List[Tuple[Chunk, bool]]] = {}
+        self._capacity: Dict[str, int] = {}
         self._requeued: List[Chunk] = []
         self._history: List[Tuple[Chunk, float]] = []
 
@@ -226,12 +230,27 @@ class _TrackedScheduler:
             return chunk
         return Chunk(chunk.start + self.offset, chunk.stop + self.offset, chunk.worker)
 
+    def set_capacity(self, worker: str, capacity: int) -> None:
+        """Allow ``worker`` to hold up to ``capacity`` chunks in flight.
+
+        The engine sets this from the backend unit's declared
+        ``capacity`` (``batch_frames`` for a batched RemoteUnit); the
+        default of 1 preserves the strict submit-only-while-idle
+        invariant for every other driver.
+        """
+        with self._lock:
+            self._capacity[worker] = max(int(capacity), 1)
+        inner_set = getattr(self.inner, "set_capacity", None)
+        if inner_set is not None:
+            inner_set(worker, capacity)
+
     def next_chunk(self, worker: str, now: float = 0.0) -> Optional[Chunk]:
         with self._lock:
             state = self._states[worker]
             if worker in self._removed:
                 return None
-            if state.busy:
+            pending = self._outstanding.get(worker, ())
+            if len(pending) >= self._capacity.get(worker, 1):
                 raise RuntimeError(f"unit {worker!r} requested a chunk while busy")
             if self._requeued:
                 span = self._requeued.pop(0)
@@ -246,23 +265,46 @@ class _TrackedScheduler:
             else:
                 return None
             state.busy = True
-            self._outstanding[worker] = (chunk, from_requeue)
+            self._outstanding.setdefault(worker, []).append((chunk, from_requeue))
             return chunk
 
-    def complete(self, worker: str, elapsed: float) -> None:
+    def complete(self, worker: str, elapsed: float,
+                 chunk: Optional[Chunk] = None) -> None:
+        """Record a completion.  ``chunk`` (matched on global
+        ``(start, stop)``) selects among several in-flight chunks when the
+        worker pipelines; ``None`` means FIFO, exact for capacity-1."""
         with self._lock:
             state = self._states[worker]
-            entry = self._outstanding.pop(worker, None)
-            if entry is None:
+            pending = self._outstanding.get(worker)
+            if not pending:
                 raise RuntimeError(f"completion from idle unit {worker!r}")
-            chunk, from_requeue = entry
-            state.busy = False
-            state.items_done += chunk.size
+            if chunk is None:
+                done, from_requeue = pending.pop(0)
+            else:
+                for i, (c, fr) in enumerate(pending):
+                    if (c.start, c.stop) == (chunk.start, chunk.stop):
+                        done, from_requeue = pending.pop(i)
+                        break
+                else:
+                    raise RuntimeError(
+                        f"completion from {worker!r} for span "
+                        f"[{chunk.start}, {chunk.stop}) that is not outstanding"
+                    )
+            if not pending:
+                del self._outstanding[worker]
+                state.busy = False
+            state.items_done += done.size
             state.chunks_done += 1
             state.total_busy_time += max(elapsed, 1e-12)
-            self._history.append((chunk, elapsed))
+            self._history.append((done, elapsed))
         if not from_requeue:
-            self.inner.complete(worker, elapsed)
+            inner_chunk = None
+            if chunk is not None and self.offset:
+                inner_chunk = Chunk(done.start - self.offset,
+                                    done.stop - self.offset, done.worker)
+            elif chunk is not None:
+                inner_chunk = done
+            self.inner.complete(worker, elapsed, chunk=inner_chunk)
 
     # -- elastic membership -------------------------------------------------
     def add_unit(
@@ -283,9 +325,10 @@ class _TrackedScheduler:
     def remove_unit(self, name: str) -> Optional[Chunk]:
         """Retire a unit mid-run (elastic leave).
 
-        The unit's in-flight chunk — and, for pre-split policies, any
-        assignment it never collected — moves to the requeue buffer.
-        Returns the aborted in-flight chunk (global indices) or None.
+        All of the unit's in-flight chunks — and, for pre-split policies,
+        any assignment it never collected — move to the requeue buffer.
+        Returns the oldest aborted in-flight chunk (global indices) or
+        None.
         """
         with self._lock:
             if name not in self._states or name in self._removed:
@@ -293,11 +336,12 @@ class _TrackedScheduler:
             self._removed.add(name)
             state = self._states[name]
             state.busy = False
-            entry = self._outstanding.pop(name, None)
+            entries = self._outstanding.pop(name, None) or []
             inflight = None
-            if entry is not None:
-                inflight = entry[0]
-                self._requeued.append(inflight)
+            for chunk, _ in entries:
+                if inflight is None:
+                    inflight = chunk
+                self._requeued.append(chunk)
             if name in self._inner_known:
                 self._inner_known.discard(name)
                 if hasattr(self.inner, "remove_worker"):

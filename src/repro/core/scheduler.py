@@ -149,9 +149,19 @@ class MultiDynamicScheduler:
         self._next = 0
         self._lock = threading.Lock()
         self._workers: Dict[str, WorkerState] = {}
-        self._outstanding: Dict[str, Chunk] = {}
+        # worker -> FIFO of in-flight chunks.  Plain (capacity-1) drivers
+        # only ever have one entry; a pipelined driver (BackendEngine over
+        # a batched RemoteUnit) raises the worker's capacity first via
+        # set_capacity() and may then keep several in flight.
+        self._outstanding: Dict[str, List[Chunk]] = {}
+        self._capacity: Dict[str, int] = {}
         self._issue_times: Dict[str, float] = {}
         self._history: List[Tuple[Chunk, float]] = []
+
+    def set_capacity(self, worker: str, capacity: int) -> None:
+        """Allow ``worker`` to hold up to ``capacity`` chunks in flight."""
+        with self._lock:
+            self._capacity[worker] = max(int(capacity), 1)
 
     # ------------------------------------------------------------------
     # worker registry
@@ -165,19 +175,20 @@ class MultiDynamicScheduler:
             self._workers[name] = WorkerState(name=name, kind=kind, throughput=throughput)
 
     def abort(self, worker: str) -> Optional[Chunk]:
-        """Drop ``worker``'s in-flight chunk without counting it.
+        """Drop ``worker``'s in-flight chunks without counting them.
 
         The elastic layer calls this when a unit departs mid-chunk; the
         caller (the tracked facade in :mod:`repro.core.runtime`) owns
-        requeueing the returned span so coverage stays exact-once.
+        requeueing the dropped spans so coverage stays exact-once.
+        Returns the first (oldest) aborted chunk, or ``None``.
         """
         with self._lock:
             state = self._workers.get(worker)
-            chunk = self._outstanding.pop(worker, None)
+            chunks = self._outstanding.pop(worker, None)
             self._issue_times.pop(worker, None)
             if state is not None:
                 state.busy = False
-            return chunk
+            return chunks[0] if chunks else None
 
     def remove_worker(self, name: str) -> Optional[Chunk]:
         """Unregister a unit mid-run (elastic leave); returns its aborted chunk."""
@@ -228,10 +239,18 @@ class MultiDynamicScheduler:
     # chunk issue / completion (the parallel_for engine of Fig. 2)
     # ------------------------------------------------------------------
     def next_chunk(self, worker: str, now: float = 0.0) -> Optional[Chunk]:
-        """Hand the next chunk to ``worker``; ``None`` when space exhausted."""
+        """Hand the next chunk to ``worker``; ``None`` when space exhausted.
+
+        A worker may hold several chunks at once when its driver pipelines
+        and raised the worker's capacity via :meth:`set_capacity`; at the
+        default capacity of 1 a busy worker cannot double-issue.  ``busy``
+        means "has at least one chunk in flight", which is what the CC
+        chunk-size adaptation's idle count keys on.
+        """
         with self._lock:
             state = self._workers[worker]
-            if state.busy:
+            pending = self._outstanding.get(worker, ())
+            if len(pending) >= self._capacity.get(worker, 1):
                 raise RuntimeError(f"worker {worker!r} requested a chunk while busy")
             remaining = self.num_items - self._next
             if remaining <= 0:
@@ -243,28 +262,48 @@ class MultiDynamicScheduler:
             chunk = Chunk(self._next, self._next + size, worker)
             self._next += size
             state.busy = True
-            self._outstanding[worker] = chunk
+            self._outstanding.setdefault(worker, []).append(chunk)
             self._issue_times[worker] = now
             return chunk
 
-    def complete(self, worker: str, elapsed: float) -> None:
-        """Record a completion (called by the interrupt/event layer)."""
+    def complete(self, worker: str, elapsed: float,
+                 chunk: Optional[Chunk] = None) -> None:
+        """Record a completion (called by the interrupt/event layer).
+
+        ``chunk`` selects which in-flight chunk finished when the worker
+        pipelines several (matched on ``(start, stop)``); ``None`` means
+        FIFO — the only case for capacity-1 drivers, where it is exact.
+        """
         with self._lock:
             state = self._workers[worker]
-            chunk = self._outstanding.pop(worker, None)
-            if chunk is None:
+            pending = self._outstanding.get(worker)
+            if not pending:
                 raise RuntimeError(f"completion from {worker!r} with no outstanding chunk")
-            state.busy = False
-            state.items_done += chunk.size
+            if chunk is None:
+                done = pending.pop(0)
+            else:
+                for i, c in enumerate(pending):
+                    if (c.start, c.stop) == (chunk.start, chunk.stop):
+                        done = pending.pop(i)
+                        break
+                else:
+                    raise RuntimeError(
+                        f"completion from {worker!r} for span "
+                        f"[{chunk.start}, {chunk.stop}) that is not outstanding"
+                    )
+            if not pending:
+                del self._outstanding[worker]
+                state.busy = False
+            state.items_done += done.size
             state.chunks_done += 1
             state.total_busy_time += max(elapsed, 1e-12)
-            inst = chunk.size / max(elapsed, 1e-12)
+            inst = done.size / max(elapsed, 1e-12)
             if state.throughput is None:
                 state.throughput = inst
             else:
                 a = self.ewma_alpha
                 state.throughput = a * inst + (1 - a) * state.throughput
-            self._history.append((chunk, elapsed))
+            self._history.append((done, elapsed))
 
     # ------------------------------------------------------------------
     # introspection
@@ -318,7 +357,8 @@ class StaticScheduler:
     def next_chunk(self, worker: str, now: float = 0.0) -> Optional[Chunk]:
         return next(self._assignments[worker], None)
 
-    def complete(self, worker: str, elapsed: float) -> None:  # pragma: no cover
+    def complete(self, worker: str, elapsed: float,
+                 chunk: Optional[Chunk] = None) -> None:  # pragma: no cover
         pass
 
 
@@ -339,5 +379,6 @@ class OracleStaticScheduler:
         self._assignments[worker] = None
         return chunk
 
-    def complete(self, worker: str, elapsed: float) -> None:  # pragma: no cover
+    def complete(self, worker: str, elapsed: float,
+                 chunk: Optional[Chunk] = None) -> None:  # pragma: no cover
         pass

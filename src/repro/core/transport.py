@@ -66,6 +66,7 @@ tests pin both halves of the contract.
 from __future__ import annotations
 
 import argparse
+import hashlib
 import os
 import pickle
 import queue
@@ -426,7 +427,7 @@ class FlakyTransport(Transport):
 # ---------------------------------------------------------------------------
 # the far side: a worker hosting real backend units
 # ---------------------------------------------------------------------------
-_DONE_CACHE_DEPTH = 8   # completion frames kept per unit for dup-resend
+_DONE_CACHE_DEPTH = 32  # completion items kept per unit for dup-resend
 _HOSTABLE = ("thread", "threads", "inline", "process", "processes", "jax")
 
 
@@ -438,15 +439,39 @@ class RemoteWorker:
     * ``hello {unit, backend}`` — start hosting a backend unit for
       ``unit`` (idempotent: duplicates re-ack with ``ready``); a bad
       backend spec answers with an ``error`` frame instead.
-    * ``submit {unit, seq, chunk, fn, t_submit}`` — execute ``fn(chunk)``
-      on the hosted unit, **at most once per seq**: duplicates of an
-      accepted seq re-send the cached ``done`` frame, or answer ``busy``
-      while that seq is still executing (the client's liveness signal for
-      long-running chunks), so retransmits and transport duplicates never
-      duplicate side effects.
+    * ``register_fn {unit, fn_id, fn}`` — the dispatch fast path's
+      descriptor cache: store ``fn`` in the session registry so later
+      work items can reference it by ``fn_id`` instead of re-shipping
+      the pickled callable per chunk.  Idempotent; registry is
+      per-session, so a worker restart naturally empties it.
+    * ``submit {unit, seq, chunk, fn|fn_ref, t_submit, floor}`` — execute
+      one chunk, **at most once per seq**: duplicates of an accepted seq
+      re-send the cached ``done`` item, or answer ``busy`` while that seq
+      is still executing (the client's liveness signal for long-running
+      chunks), so retransmits and transport duplicates never duplicate
+      side effects.  A ``fn_ref`` that is not in the registry (lost or
+      never-sent registration, worker restart) answers ``unknown_fn`` —
+      the client re-registers and retransmits.
+    * ``work_batch {unit, floor, items: [{seq, chunk, fn|fn_ref,
+      t_submit}, ...]}`` — several chunks in one frame (the client's
+      ``batch_frames`` coalescing); each item is accepted/deduped
+      independently under the same seq protocol, and ``floor`` (the
+      client's lowest still-pending seq) prunes the accepted-seq set and
+      the done cache.  With batching the client may have several frames
+      racing, so acceptance is an exact per-seq set — a reordered older
+      frame is still accepted after a newer one, and only seqs below
+      ``floor`` (completions the client already processed) are dropped
+      as stale.
     * ``bye {unit}`` — graceful drain: stop hosting the unit (its
-      in-flight chunk completes first; thread/pool shutdown waits on it).
+      in-flight chunks complete first; thread/pool shutdown waits).
     * ``shutdown`` — end the serve loop.
+
+    Completions drain through one pump pass per bus wakeup: all finished
+    chunks of a unit found in one drain are posted as a single
+    ``done_batch`` frame (a lone completion keeps the legacy ``done``
+    shape), each item carrying ``t_accept`` (frame arrival) and
+    ``t_start`` (execution start) so the client can attribute the wire
+    transit per chunk without double counting.
 
     All timestamps are ``time.perf_counter()`` — CLOCK_MONOTONIC, which
     on Linux is shared by every process on one machine, so worker-side
@@ -463,13 +488,25 @@ class RemoteWorker:
         self.poll_interval = poll_interval
         self.bus = CompletionBus()
         self._units: Dict[str, BackendUnit] = {}
-        self._last_seq: Dict[str, int] = {}
-        self._inflight: Dict[str, Tuple[int, float]] = {}  # unit -> (seq, t_accept)
+        self._fns: Dict[str, Callable] = {}            # session fn registry
+        self._accepted: Dict[str, set] = {}            # unit -> accepted seqs
+        self._floor: Dict[str, int] = {}               # unit -> client floor
+        # unit -> seq -> (t_accept, chunk), insertion-ordered
+        self._inflight: Dict[str, "OrderedDict[int, Tuple[float, Chunk]]"] = {}
         self._done_cache: Dict[str, "OrderedDict[int, dict]"] = {}
         self._lock = threading.Lock()
         self._stop = threading.Event()
 
     # -- outbound ------------------------------------------------------------
+    @staticmethod
+    def _strip(frame: dict, reason: Exception) -> dict:
+        err = TransportError(f"completion payload not transportable: {reason}")
+        if "items" in frame:
+            return {**frame, "items": [
+                {**item, "result": None, "error": err}
+                for item in frame["items"]]}
+        return {**frame, "result": None, "error": err}
+
     def _send(self, frame: dict) -> None:
         try:
             self.transport.send(frame)
@@ -483,11 +520,8 @@ class RemoteWorker:
             # alive so the client gets an explanatory error instead of a
             # retransmit-exhaustion "lost worker"
             reason = exc
-        stripped = {**frame, "result": None,
-                    "error": TransportError(
-                        f"completion payload not transportable: {reason}")}
         try:
-            self.transport.send(stripped)
+            self.transport.send(self._strip(frame, reason))
         except TransportError:
             self._stop.set()
 
@@ -505,67 +539,132 @@ class RemoteWorker:
             unit.start(self.bus)
             with self._lock:
                 self._units[name] = unit
-                self._last_seq[name] = -1
+                self._accepted[name] = set()
+                self._floor[name] = 0
+                self._inflight[name] = OrderedDict()
                 self._done_cache[name] = OrderedDict()
         self._send({"kind": "ready", "unit": name})
 
-    def _handle_submit(self, frame: dict) -> None:
-        name, seq = frame.get("unit"), frame.get("seq")
-        reply = None
-        accepted = False
+    def _handle_register(self, frame: dict) -> None:
+        fn_id, fn = frame.get("fn_id"), frame.get("fn")
+        if fn_id is not None and fn is not None:
+            with self._lock:
+                self._fns[fn_id] = fn
+
+    def _handle_work(self, frame: dict) -> None:
+        """Accept the work items of a ``submit`` or ``work_batch`` frame."""
+        name = frame.get("unit")
+        items = frame.get("items") if frame.get("kind") == "work_batch" else [frame]
+        t_accept = time.perf_counter()
+        replies: List[dict] = []
+        resend_items: List[dict] = []
+        to_exec: List[Tuple[Chunk, Callable]] = []
         with self._lock:
             unit = self._units.get(name)
             if unit is None:
-                return  # submit raced ahead of hello; retransmit will return
-            if seq <= self._last_seq[name]:
-                cached = self._done_cache[name].get(seq)
-                if cached is not None:
-                    reply = cached  # completion was lost in flight: resend
-                elif self._inflight.get(name, (None,))[0] == seq:
-                    # still executing: answer the probe so the client's
-                    # retransmit budget measures *silence*, not work time
-                    reply = {"kind": "busy", "unit": name, "seq": seq}
-                # else: stale duplicate from before the cache window — drop
-            elif name in self._inflight:
-                pass  # defensive: never two executions on one unit
+                return  # work raced ahead of hello; retransmit will return
+            floor = frame.get("floor")
+            if isinstance(floor, int) and floor > self._floor[name]:
+                self._floor[name] = floor
+                accepted = self._accepted[name]
+                accepted -= {s for s in accepted if s < floor}
+                cache = self._done_cache[name]
+                for seq in [s for s in cache if s < floor]:
+                    del cache[seq]
+            for item in items or ():
+                seq = item.get("seq")
+                if seq is None or seq < self._floor[name]:
+                    continue  # stale: the client already moved past it
+                if seq in self._accepted[name]:
+                    cached = self._done_cache[name].get(seq)
+                    if cached is not None:
+                        resend_items.append(cached)  # lost done: resend
+                    elif seq in self._inflight[name]:
+                        # still executing: answer the probe so the client's
+                        # retransmit budget measures *silence*, not work
+                        replies.append({"kind": "busy", "unit": name,
+                                        "seq": seq})
+                    # else: completed and pruned — drop
+                    continue
+                if "fn" in item:
+                    fn = item["fn"]
+                else:
+                    fn = self._fns.get(item.get("fn_ref"))
+                    if fn is None:
+                        # registration lost or pre-restart: NACK so the
+                        # client re-registers and retransmits this seq
+                        replies.append({"kind": "unknown_fn", "unit": name,
+                                        "seq": seq,
+                                        "fn_id": item.get("fn_ref")})
+                        continue
+                self._accepted[name].add(seq)
+                self._inflight[name][seq] = (t_accept, item["chunk"])
+                to_exec.append((item["chunk"], fn))
+        if resend_items:
+            if len(resend_items) == 1:
+                self._send({"kind": "done", "unit": name, **resend_items[0]})
             else:
-                self._last_seq[name] = seq
-                self._inflight[name] = (seq, time.perf_counter())
-                accepted = True
-        if reply is not None:
+                self._send({"kind": "done_batch", "unit": name,
+                            "items": resend_items})
+        for reply in replies:
             self._send(reply)
-        if accepted:
-            unit.submit(frame["chunk"], frame["fn"])
+        for chunk, fn in to_exec:
+            unit.submit(chunk, fn)
 
     def _handle_bye(self, frame: dict) -> None:
+        name = frame.get("unit")
         with self._lock:
-            unit = self._units.pop(frame.get("unit"), None)
+            unit = self._units.pop(name, None)
+            self._accepted.pop(name, None)
+            self._floor.pop(name, None)
+            self._inflight.pop(name, None)
+            self._done_cache.pop(name, None)
         if unit is not None:
-            unit.close()  # waits for an in-flight chunk (graceful drain)
+            unit.close()  # waits for in-flight chunks (graceful drain)
 
     def _pump(self) -> None:
-        """Forward hosted-unit completions as ``done`` frames."""
+        """Forward hosted-unit completions, one frame per unit per drain.
+
+        Several completions of the same unit found in one drain coalesce
+        into a single ``done_batch`` frame — the worker-side half of the
+        frame-batching fast path; a lone completion keeps the legacy
+        ``done`` frame shape.
+        """
         while not self._stop.is_set():
             self.bus.wait(timeout=self.poll_interval)
+            grouped: "OrderedDict[str, List[dict]]" = OrderedDict()
             for rec in self.bus.drain():
                 with self._lock:
-                    entry = self._inflight.pop(rec.unit, None)
-                if entry is None:
-                    continue  # completion of a bye'd unit's last chunk
-                seq, t_accept = entry
-                frame = {
-                    "kind": "done", "unit": rec.unit, "seq": seq,
-                    "chunk": rec.chunk, "elapsed": rec.elapsed,
-                    "t_start": t_accept + rec.dispatch_latency,
-                    "error": rec.error, "result": rec.result,
-                }
-                with self._lock:
+                    pend = self._inflight.get(rec.unit)
+                    entry = None
+                    if pend:
+                        for seq, (t_accept, chunk) in pend.items():
+                            if (chunk.start, chunk.stop) == (rec.chunk.start,
+                                                             rec.chunk.stop):
+                                entry = (seq, t_accept)
+                                del pend[seq]
+                                break
+                    if entry is None:
+                        continue  # completion of a bye'd unit's last chunk
+                    seq, t_accept = entry
+                    item = {
+                        "seq": seq, "chunk": rec.chunk,
+                        "elapsed": rec.elapsed, "t_accept": t_accept,
+                        "t_start": t_accept + rec.dispatch_latency,
+                        "error": rec.error, "result": rec.result,
+                    }
                     cache = self._done_cache.get(rec.unit)
                     if cache is not None:
-                        cache[seq] = frame
+                        cache[seq] = item
                         while len(cache) > _DONE_CACHE_DEPTH:
                             cache.popitem(last=False)
-                self._send(frame)
+                grouped.setdefault(rec.unit, []).append(item)
+            for name, items in grouped.items():
+                if len(items) == 1:
+                    self._send({"kind": "done", "unit": name, **items[0]})
+                else:
+                    self._send({"kind": "done_batch", "unit": name,
+                                "items": items})
 
     # -- the loop ------------------------------------------------------------
     def serve(self) -> None:
@@ -584,8 +683,10 @@ class RemoteWorker:
                 kind = frame.get("kind")
                 if kind == "hello":
                     self._handle_hello(frame)
-                elif kind == "submit":
-                    self._handle_submit(frame)
+                elif kind in ("submit", "work_batch"):
+                    self._handle_work(frame)
+                elif kind == "register_fn":
+                    self._handle_register(frame)
                 elif kind == "bye":
                     self._handle_bye(frame)
                 elif kind == "shutdown":
@@ -673,16 +774,41 @@ class RemoteUnit(BackendUnit):
     session).  ``remote_backend`` names the backend the worker hosts for
     this unit ("thread" by default).
 
-    ``submit`` is non-blocking: it frames the chunk and returns; the
-    receiver thread retransmits the pending frame every
-    ``retry_interval`` seconds until its ``done`` arrives (the worker
-    dedups, so retransmits are safe), posts the completion to the run's
-    bus, and records the dispatch-latency split —
+    Dispatch fast path knobs:
+
+    * ``fn_cache`` (default on) — the session descriptor cache: each
+      distinct work function is shipped **once** via a ``register_fn``
+      frame and referenced by a content-hash id in every work item
+      after that, instead of re-pickling the whole callable per chunk.
+      A changed function hashes differently and re-registers; an
+      unpicklable one (loopback lambdas) falls back to an identity-based
+      id, still by-reference-safe.  If the worker does not know the id
+      (dropped registration, worker restart → new session), it answers
+      ``unknown_fn`` and the client re-registers and retransmits — the
+      seq/dedup exact-once invariant is preserved because the work item
+      itself was never accepted.
+    * ``batch_frames`` (default 1) — coalesce up to this many queued
+      chunks into one ``work_batch`` frame, amortizing the per-frame
+      wire cost.  The unit advertises ``capacity = batch_frames`` so the
+      engine pipelines that many chunks; scheduler-visible granularity
+      and per-chunk completion accounting are unchanged, and
+      ``batch_frames=1`` keeps the legacy one-``submit``-per-chunk wire
+      shape exactly.
+
+    ``submit`` is non-blocking: it buffers the chunk (sending
+    immediately when a batch fills or :meth:`flush` is called); the
+    receiver thread retransmits all still-pending work every
+    ``retry_interval`` seconds until each ``done`` arrives (the worker
+    dedups by exact seq set, so retransmits are safe), posts completions
+    to the run's bus, and records the dispatch-latency split —
 
     * ``dispatch_latencies``: submit → remote execution start (total),
     * ``local_queue_latencies``: submit → first socket write,
-    * ``wire_latencies``: first write → remote execution start (wire +
-      remote queue; surfaced as ``RunReport.wire_latency``).
+    * ``wire_latencies``: first write → remote execution start, with the
+      frame's transit time attributed **per chunk** (divided by the
+      number of chunks that shared the frame) so a batched frame's wire
+      time is never double-counted; surfaced as
+      ``RunReport.wire_latency``.
 
     The split subtracts worker-side from client-side ``perf_counter``
     readings, so it is meaningful when both share a machine (subprocess
@@ -693,7 +819,7 @@ class RemoteUnit(BackendUnit):
     Definitive EOF, a failed send, or ``max_retries`` unanswered
     retransmits post a :class:`~repro.core.backends.WorkerLost`
     completion instead — the engine's signal to requeue the in-flight
-    chunk and drop this unit from the run.
+    chunks and drop this unit from the run.
     """
 
     kind_name = "remote"
@@ -708,6 +834,8 @@ class RemoteUnit(BackendUnit):
         retry_interval: float = 0.1,
         max_retries: int = 100,
         connect_timeout: float = 10.0,
+        batch_frames: int = 1,
+        fn_cache: bool = True,
     ) -> None:
         super().__init__(name)
         if (address is None) == (transport is None):
@@ -717,17 +845,28 @@ class RemoteUnit(BackendUnit):
                 f"remote_backend must be one of {_HOSTABLE}, "
                 f"got {remote_backend!r} (no proxy chains)"
             )
+        if int(batch_frames) < 1:
+            raise ValueError(f"batch_frames must be >= 1, got {batch_frames}")
         self.address = address
         self.remote_backend = remote_backend
         self.retry_interval = float(retry_interval)
         self.max_retries = int(max_retries)
         self.connect_timeout = float(connect_timeout)
+        self.batch_frames = int(batch_frames)
+        self.capacity = self.batch_frames  # engine pipelines this many
+        self.fn_cache = bool(fn_cache)
         self._transport = transport
         self.lost = False
         self.wire_latencies: List[float] = []
         self.local_queue_latencies: List[float] = []
         self._seq = 0
-        self._pending: Optional[dict] = None
+        # seq -> {seq, chunk, fn, t_submit, t_sent, sends, next_resend,
+        #         batch_n}; insertion order == seq order
+        self._pending: "OrderedDict[int, dict]" = OrderedDict()
+        self._unsent: List[int] = []
+        self._registered: set = set()               # fn_ids the worker knows
+        self._fn_refs: Dict[str, Callable] = {}     # keep ids alive
+        self._fn_id_cache: Dict[int, str] = {}      # id(fn) -> fn_id
         self._plock = threading.Lock()
         self._stop = threading.Event()
         self._recv_thread: Optional[threading.Thread] = None
@@ -737,6 +876,14 @@ class RemoteUnit(BackendUnit):
         super().start(bus)
         self.wire_latencies = []
         self.local_queue_latencies = []
+        with self._plock:
+            # fresh session: the worker's fn registry is per-session, so
+            # every descriptor must be re-shipped after a restart
+            self._pending = OrderedDict()
+            self._unsent = []
+            self._registered = set()
+            self._fn_refs = {}
+            self._fn_id_cache = {}
         if self._transport is None or self._transport.closed:
             if self.address is None:
                 raise TransportClosed(
@@ -797,38 +944,116 @@ class RemoteUnit(BackendUnit):
             self._transport.close()
         super().close()
 
+    # -- descriptor cache ---------------------------------------------------
+    def _fn_id(self, fn: Callable) -> str:
+        """Content-hash id for ``fn`` (identity-cached per object).
+
+        ``h:<sha1>`` of the pickled callable — two objects with the same
+        content share a registration, and a *changed* function hashes
+        differently so it re-registers.  Unpicklable callables (loopback
+        lambdas, closures over live objects) get an identity id
+        ``r:<id>``; the strong reference kept in ``_fn_refs`` makes the
+        id stable for the session.
+        """
+        key = id(fn)
+        cached = self._fn_id_cache.get(key)
+        if cached is not None and self._fn_refs.get(cached) is fn:
+            return cached
+        try:
+            blob = pickle.dumps(fn, protocol=pickle.HIGHEST_PROTOCOL)
+            fid = "h:" + hashlib.sha1(blob).hexdigest()[:16]
+        except Exception:
+            fid = f"r:{id(fn):x}"
+        self._fn_id_cache[key] = fid
+        self._fn_refs[fid] = fn
+        return fid
+
     # -- submission ---------------------------------------------------------
     def submit(self, chunk: Chunk, work_fn: Callable[[Chunk], Any]) -> None:
         if self.lost or self._transport is None or self._transport.closed:
             self._post_lost(chunk, "transport already lost at submit")
             return
         t_submit = time.perf_counter()
-        frame = {"kind": "submit", "unit": self.name, "seq": self._seq,
-                 "chunk": chunk, "fn": work_fn, "t_submit": t_submit}
         with self._plock:
-            self._pending = {
-                "seq": self._seq, "frame": frame, "chunk": chunk,
-                "t_submit": t_submit, "t_sent": None, "sends": 0,
-                "next_resend": 0.0,
-            }
+            seq = self._seq
             self._seq += 1
-        self._transmit_pending()
+            self._pending[seq] = {
+                "seq": seq, "chunk": chunk, "fn": work_fn,
+                "t_submit": t_submit, "t_sent": None, "sends": 0,
+                "next_resend": 0.0, "batch_n": 1,
+            }
+            self._unsent.append(seq)
+            full = len(self._unsent) >= self.batch_frames
+        if full:
+            self.flush()
 
-    def _transmit_pending(self) -> None:
+    def flush(self) -> None:
+        """Send every buffered (not-yet-transmitted) chunk now."""
+        self._transmit(resend=False)
+
+    def _transmit(self, *, resend: bool) -> None:
+        """Frame and send pending work: the unsent buffer (``resend=False``)
+        or everything already on the wire (``resend=True``, one batch).
+
+        A single item keeps the legacy ``submit`` frame shape; two or
+        more coalesce into one ``work_batch``.  Needed ``register_fn``
+        frames precede the work frame.  ``floor`` — the lowest seq the
+        client still cares about — rides on every work frame so the
+        worker can prune its accepted-seq set and done cache.
+        """
+        frames: List[dict] = []
         with self._plock:
-            p = self._pending
-            if p is None:
+            if resend:
+                seqs = [s for s, p in self._pending.items()
+                        if p["t_sent"] is not None]
+            else:
+                seqs, self._unsent = self._unsent, []
+            if not seqs:
                 return
             now = time.perf_counter()
-            if p["t_sent"] is None:
-                p["t_sent"] = now
-            p["sends"] += 1
-            p["next_resend"] = now + self.retry_interval
-            frame = p["frame"]
+            floor = min(self._pending) if self._pending else self._seq
+            items: List[dict] = []
+            for seq in seqs:
+                p = self._pending.get(seq)
+                if p is None:
+                    continue  # completed while queued for resend
+                if p["t_sent"] is None:
+                    p["t_sent"] = now
+                p["sends"] += 1
+                p["next_resend"] = now + self.retry_interval
+                item = {"seq": seq, "chunk": p["chunk"],
+                        "t_submit": p["t_submit"]}
+                if self.fn_cache:
+                    fid = self._fn_id(p["fn"])
+                    if fid not in self._registered:
+                        frames.append({"kind": "register_fn",
+                                       "unit": self.name,
+                                       "fn_id": fid, "fn": p["fn"]})
+                        self._registered.add(fid)
+                    item["fn_ref"] = fid
+                else:
+                    item["fn"] = p["fn"]
+                items.append(item)
+            if not items:
+                return
+            if not resend:
+                # first transmission: record how many chunks share the
+                # frame, for the per-chunk wire-time attribution
+                for item in items:
+                    p = self._pending.get(item["seq"])
+                    if p is not None:
+                        p["batch_n"] = len(items)
+            if len(items) == 1:
+                frames.append({"kind": "submit", "unit": self.name,
+                               "floor": floor, **items[0]})
+            else:
+                frames.append({"kind": "work_batch", "unit": self.name,
+                               "floor": floor, "items": items})
         try:
-            self._transport.send(frame)
+            for frame in frames:
+                self._transport.send(frame)
         except TransportError:
-            self._fail_pending("connection lost while sending a submit")
+            self._fail_pending("connection lost while sending work")
 
     # -- the receiver thread -------------------------------------------------
     def _recv_loop(self) -> None:
@@ -845,49 +1070,88 @@ class RemoteUnit(BackendUnit):
 
     def _maybe_retransmit(self) -> None:
         exhausted = False
-        due = False
+        resend = False
+        flush_stranded = False
+        now = time.perf_counter()
         with self._plock:
-            p = self._pending
-            if p is not None and time.perf_counter() >= p["next_resend"]:
-                if p["sends"] > self.max_retries:
-                    exhausted = True
-                else:
-                    due = True
+            for p in self._pending.values():
+                if p["t_sent"] is None:
+                    # safety net: an unsent chunk nobody flushed (a driver
+                    # bypassing the engine's flush) still goes out
+                    if now >= p["t_submit"] + self.retry_interval:
+                        flush_stranded = True
+                    continue
+                if now >= p["next_resend"]:
+                    if p["sends"] > self.max_retries:
+                        exhausted = True
+                        break
+                    resend = True
         if exhausted:
             self._fail_pending(
                 f"no completion after {self.max_retries} retransmits"
             )
-        elif due:
-            self._transmit_pending()
+            return
+        if flush_stranded:
+            self.flush()
+        if resend:
+            self._transmit(resend=True)
 
     def _on_frame(self, frame: dict) -> None:
         if frame.get("unit") != self.name:
             return
-        if frame.get("kind") == "busy":
-            # the worker is alive and executing our pending seq: the
+        kind = frame.get("kind")
+        if kind == "busy":
+            # the worker is alive and executing this pending seq: the
             # retransmit budget bounds unresponsiveness, not work time
             with self._plock:
-                p = self._pending
-                if p is not None and frame.get("seq") == p["seq"]:
+                p = self._pending.get(frame.get("seq"))
+                if p is not None:
                     p["sends"] = 1
             return
-        if frame.get("kind") != "done":
+        if kind == "unknown_fn":
+            # the worker does not know this descriptor (registration lost
+            # or worker restarted): re-register and retransmit right away.
+            # sends keeps counting (unlike busy) so a poison registration
+            # still exhausts into WorkerLost instead of looping forever.
+            with self._plock:
+                self._registered.discard(frame.get("fn_id"))
+                p = self._pending.get(frame.get("seq"))
+                if p is not None:
+                    p["next_resend"] = 0.0
             return
+        if kind == "done":
+            self._on_done_item(frame)
+        elif kind == "done_batch":
+            for item in frame.get("items") or ():
+                self._on_done_item(item)
+
+    def _on_done_item(self, item: dict) -> None:
         with self._plock:
-            p = self._pending
-            if p is None or frame.get("seq") != p["seq"]:
-                return  # duplicate/stale completion: drop on the floor
-            self._pending = None
-        t_start = frame.get("t_start")
+            p = self._pending.pop(item.get("seq"), None)
+        if p is None:
+            return  # duplicate/stale completion: drop on the floor
+        t_sent = p["t_sent"] if p["t_sent"] is not None else p["t_submit"]
+        t_start = item.get("t_start")
         if t_start is None:
-            t_start = p["t_sent"]
-        self.wire_latencies.append(max(t_start - p["t_sent"], 0.0))
-        self.local_queue_latencies.append(max(p["t_sent"] - p["t_submit"], 0.0))
+            t_start = t_sent
+        t_accept = item.get("t_accept")
+        if t_accept is None:
+            t_accept = t_start
+        batch_n = max(int(p.get("batch_n") or 1), 1)
+        # Per-chunk wire attribution: the frame's transit time
+        # (send -> worker accept) is shared by every chunk in the frame,
+        # so each chunk gets 1/batch_n of it; the remote queue wait
+        # (accept -> execution start) is genuinely per-chunk.  Summed
+        # over a batch this counts the frame's transit exactly once.
+        wire = (max(t_accept - t_sent, 0.0) / batch_n
+                + max(t_start - t_accept, 0.0))
+        self.wire_latencies.append(wire)
+        self.local_queue_latencies.append(max(t_sent - p["t_submit"], 0.0))
         self._post(CompletionRecord(
             unit=self.name, chunk=p["chunk"],
-            elapsed=float(frame.get("elapsed", 0.0)),
+            elapsed=float(item.get("elapsed", 0.0)),
             dispatch_latency=max(t_start - p["t_submit"], 0.0),
-            error=frame.get("error"), result=frame.get("result"),
+            error=item.get("error"), result=item.get("result"),
         ))
 
     # -- failure ------------------------------------------------------------
@@ -902,11 +1166,15 @@ class RemoteUnit(BackendUnit):
 
     def _fail_pending(self, why: str) -> None:
         with self._plock:
-            p, self._pending = self._pending, None
+            pending, self._pending = self._pending, OrderedDict()
+            self._unsent = []
         self.lost = True
         self._stop.set()
-        if p is not None:
-            self._post_lost(p["chunk"], why)
+        # one WorkerLost is enough: the engine answers it by removing the
+        # unit, which requeues *all* of its outstanding chunks at once
+        first = next(iter(pending.values()), None)
+        if first is not None:
+            self._post_lost(first["chunk"], why)
 
     def describe(self) -> str:
         where = self.address if self.address is not None else "injected transport"

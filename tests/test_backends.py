@@ -374,6 +374,172 @@ class TestCompletionBusProperty:
 
 
 # ---------------------------------------------------------------------------
+# sharded CompletionBus (ISSUE 8): per-unit slots + a single notify event
+# replace the global-lock scan; same API, so the contracts get harder —
+# N producers x M registered slots, and wait() may never miss a notify
+# ---------------------------------------------------------------------------
+class TestCompletionBusSharded:
+    @given(n_threads=st.integers(2, 8), n_units=st.integers(1, 5),
+           per_thread=st.integers(10, 60), seed=st.integers(0, 10**6))
+    @settings(max_examples=15, deadline=None)
+    def test_n_producers_m_unit_slots_no_loss(self, n_threads, n_units,
+                                              per_thread, seed):
+        import random
+
+        bus = CompletionBus()
+        for m in range(n_units):
+            bus.register(f"u{m}")  # dedicated slots (the fast path)
+        # one unregistered unit exercises the default slot alongside them
+        names = [f"u{m}" for m in range(n_units)] + ["ghost"]
+        barrier = threading.Barrier(n_threads)
+
+        def producer(t):
+            rng = random.Random(seed * 7919 + t)
+            barrier.wait()
+            for k in range(per_thread):
+                if rng.random() < 0.2:
+                    time.sleep(rng.uniform(0.0, 1e-4))
+                unit = names[rng.randrange(len(names))]
+                bus.post(CompletionRecord(
+                    unit=unit, chunk=Chunk(t * per_thread + k,
+                                           t * per_thread + k + 1, unit),
+                    elapsed=0.0, dispatch_latency=0.0,
+                ))
+
+        producers = [threading.Thread(target=producer, args=(t,), daemon=True)
+                     for t in range(n_threads)]
+        collected, clock = [], threading.Lock()
+        stop = threading.Event()
+
+        def consumer():
+            while not stop.is_set():
+                bus.wait(timeout=0.2)
+                got = bus.drain()
+                if got:
+                    with clock:
+                        collected.extend(got)
+
+        consumers = [threading.Thread(target=consumer, daemon=True)
+                     for _ in range(2)]
+        for t in producers + consumers:
+            t.start()
+        for t in producers:
+            t.join(timeout=30.0)
+        total = n_threads * per_thread
+        deadline = time.perf_counter() + 30.0
+        while time.perf_counter() < deadline:
+            with clock:
+                if len(collected) >= total:
+                    break
+            time.sleep(1e-3)
+        stop.set()
+        for t in consumers:
+            t.join(timeout=10.0)
+        collected.extend(bus.drain())
+        assert len(collected) == total
+        tally = Counter(r.chunk.start for r in collected)
+        dupes = {k for k, c in tally.items() if c != 1}
+        assert not dupes, f"lost or duplicated completions: {sorted(dupes)}"
+        assert set(tally) == set(range(total))
+
+    def test_wait_never_misses_a_notify_ping_pong(self):
+        # strict alternation: every post must wake exactly one wait();
+        # a lost wakeup shows up as a timed-out round
+        bus = CompletionBus()
+        bus.register("u0")
+        ack = threading.Event()
+        rounds = 400
+
+        def producer():
+            for k in range(rounds):
+                bus.post(CompletionRecord(
+                    unit="u0", chunk=Chunk(k, k + 1, "u0"),
+                    elapsed=0.0, dispatch_latency=0.0,
+                ))
+                assert ack.wait(timeout=10.0)
+                ack.clear()
+
+        t = threading.Thread(target=producer, daemon=True)
+        t.start()
+        seen = 0
+        for _ in range(rounds):
+            assert bus.wait(timeout=10.0), (
+                f"wait() missed the notify after {seen} records")
+            got = bus.drain()
+            assert len(got) == 1
+            assert got[0].chunk.start == seen
+            seen += 1
+            ack.set()
+        t.join(timeout=10.0)
+        assert seen == rounds
+
+    def test_register_is_idempotent_and_preserves_queued_records(self):
+        bus = CompletionBus()
+        bus.post(CompletionRecord(unit="u0", chunk=Chunk(0, 1, "u0"),
+                                  elapsed=0.0, dispatch_latency=0.0))
+        bus.register("u0")
+        bus.register("u0")
+        bus.post(CompletionRecord(unit="u0", chunk=Chunk(1, 2, "u0"),
+                                  elapsed=0.0, dispatch_latency=0.0))
+        got = bus.drain()
+        assert sorted(r.chunk.start for r in got) == [0, 1]
+
+
+# ---------------------------------------------------------------------------
+# engine pipelining (ISSUE 8): a unit advertising capacity > 1 gets that
+# many chunks in flight before the per-dispatch flush() fires
+# ---------------------------------------------------------------------------
+class BatchingProbeUnit(backends_mod.BackendUnit):
+    """Pipelined fake: buffers submits, executes on flush, records depths."""
+
+    def __init__(self, name, capacity):
+        super().__init__(name)
+        self.capacity = capacity
+        self._buf = []
+        self.flush_batches = []
+
+    def submit(self, chunk, work_fn):
+        self._buf.append((chunk, work_fn, time.perf_counter()))
+
+    def flush(self):
+        batch, self._buf = self._buf, []
+        if not batch:
+            return
+        self.flush_batches.append(len(batch))
+        for chunk, fn, t0 in batch:
+            self._execute(chunk, fn, t0)
+
+
+class TestEnginePipelining:
+    def _run(self, capacity, n_items=64, acc_chunk=4):
+        rec = Recorder()
+        rt = HeteroRuntime()
+        probe = BatchingProbeUnit("b0", capacity=capacity)
+        rt.register_unit("b0", WorkerKind.CC, work_fn=rec, backend=probe)
+        rep = rt.parallel_for(num_items=n_items, policy="multidynamic",
+                              engine="interrupt", acc_chunk=acc_chunk)
+        return rep, rec, probe
+
+    def test_capacity_fills_before_flush(self):
+        rep, rec, probe = self._run(capacity=4)
+        assert rep.items == 64
+        assert_exact_tiling(rep.coverage, 64)
+        rec.assert_exactly_once(64)
+        assert sum(probe.flush_batches) == rep.chunks  # all went via flush
+        assert max(probe.flush_batches) >= 2, (
+            "engine never pipelined past one in-flight chunk "
+            f"(flush depths: {probe.flush_batches})")
+        assert probe.flush_batches[0] == 4, (
+            "first dispatch must fill the advertised capacity")
+
+    def test_capacity_one_keeps_strict_alternation(self):
+        rep, rec, probe = self._run(capacity=1)
+        assert rep.items == 64
+        rec.assert_exactly_once(64)
+        assert probe.flush_batches == [1] * rep.chunks
+
+
+# ---------------------------------------------------------------------------
 # the event-driven engine through parallel_for
 # ---------------------------------------------------------------------------
 def make_wall_runtime(work_fn, n_units=3, backend=None):

@@ -56,7 +56,12 @@ from repro.core import (
 from repro.core.backends import CompletionBus, make_backend
 from repro.core.runtime import POLICIES
 from repro.core.scheduler import Chunk
-from repro.core.transport import FrameDecoder, encode_frame, spawn_worker
+from repro.core.transport import (
+    FrameDecoder,
+    SleepWork,
+    encode_frame,
+    spawn_worker,
+)
 
 
 def assert_exact_tiling(spans, n_items):
@@ -103,11 +108,62 @@ def start_loopback_worker(*, flaky_seed=None, **faults):
 
 
 def loopback_unit(name, *, flaky_seed=None, retry_interval=0.02,
-                  max_retries=600, **faults):
+                  max_retries=600, batch_frames=1, fn_cache=True, **faults):
     client_side, worker, _t = start_loopback_worker(
         flaky_seed=flaky_seed, **faults)
     return RemoteUnit(name, transport=client_side,
-                      retry_interval=retry_interval, max_retries=max_retries)
+                      retry_interval=retry_interval, max_retries=max_retries,
+                      batch_frames=batch_frames, fn_cache=fn_cache)
+
+
+class FrameTap:
+    """Pass-through transport recording every frame sent through it."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.sent = []
+        self._lock = threading.Lock()
+
+    def send(self, frame):
+        with self._lock:
+            self.sent.append(frame)
+        self._forward(frame)
+
+    def _forward(self, frame):
+        """Override to drop/mangle frames (still recorded in .sent)."""
+        self.inner.send(frame)
+
+    def recv(self, timeout=None):
+        return self.inner.recv(timeout)
+
+    def close(self):
+        self.inner.close()
+
+    @property
+    def closed(self):
+        return self.inner.closed
+
+    def kinds(self):
+        with self._lock:
+            return Counter(f.get("kind") for f in self.sent)
+
+    def frames(self, kind):
+        with self._lock:
+            return [f for f in self.sent if f.get("kind") == kind]
+
+
+def tapped_loopback_unit(name, *, batch_frames=1, fn_cache=True,
+                         tap_cls=FrameTap, **kw):
+    """A clean-medium loopback unit whose client->worker frames are
+    recorded in (and optionally filtered by) the returned FrameTap."""
+    client_end, worker_end = LoopbackTransport.pair()
+    worker = RemoteWorker(worker_end, poll_interval=0.02)
+    threading.Thread(target=worker.serve, daemon=True).start()
+    tap = tap_cls(client_end)
+    unit = RemoteUnit(name, transport=tap, retry_interval=0.05,
+                      max_retries=200, batch_frames=batch_frames,
+                      fn_cache=fn_cache, **kw)
+    return unit, tap, worker
 
 
 # ---------------------------------------------------------------------------
@@ -151,6 +207,89 @@ class TestFrameCodec:
         out = dec.feed(data + encode_frame(good))
         assert out[0]["kind"] == "undecodable"
         assert out[1] == good
+
+
+def _random_batched_frame(rng):
+    """A randomized fast-path frame (work_batch / done_batch / singletons)."""
+    kind = rng.choice(["work_batch", "done_batch", "submit", "register_fn"])
+    frame = {"kind": kind, "unit": f"u{rng.randrange(4)}"}
+    if kind in ("work_batch", "submit"):
+        frame["floor"] = rng.randrange(64)
+    if kind == "register_fn":
+        frame["fn_id"] = f"h:{rng.getrandbits(64):016x}"
+        frame["fn"] = SleepWork(rng.random() * 1e-6)
+        return frame
+    items = []
+    for i in range(rng.randint(1, 8)):
+        start = rng.randrange(1000)
+        items.append({
+            "seq": rng.randrange(512),
+            "chunk": Chunk(start, start + rng.randint(1, 32), frame["unit"]),
+            "t_submit": rng.random(),
+            "blob": bytes(rng.getrandbits(8)
+                          for _ in range(rng.randint(0, 300))),
+        })
+    if kind == "submit":
+        frame.update(items[0])
+    else:
+        frame["items"] = items
+    return frame
+
+
+class TestBatchedFrameCodecProperty:
+    """encode_frame/FrameDecoder on randomized fast-path frames, split
+    across arbitrary byte boundaries, with poison recovery mid-batch."""
+
+    @given(seed=st.integers(0, 10**6))
+    @settings(max_examples=30, deadline=None)
+    def test_roundtrip_any_segmentation(self, seed):
+        import random
+
+        rng = random.Random(seed)
+        frames = [_random_batched_frame(rng)
+                  for _ in range(rng.randint(1, 6))]
+        stream = b"".join(encode_frame(f) for f in frames)
+        dec = FrameDecoder()
+        out, i = [], 0
+        while i < len(stream):
+            j = min(len(stream), i + rng.randint(1, 17))
+            out.extend(dec.feed(stream[i:j]))
+            i = j
+        assert len(out) == len(frames)
+        for got, want in zip(out, frames):
+            # SleepWork instances pickle-roundtrip into equal-by-field
+            # copies, not identical objects — compare the stable keys
+            assert got["kind"] == want["kind"]
+            assert {k: v for k, v in got.items() if k != "fn"} == \
+                   {k: v for k, v in want.items() if k != "fn"}
+
+    @given(seed=st.integers(0, 10**6))
+    @settings(max_examples=20, deadline=None)
+    def test_poison_frame_mid_batch_stream_recovers(self, seed):
+        import random
+        import struct
+
+        rng = random.Random(seed)
+        before = [_random_batched_frame(rng)
+                  for _ in range(rng.randint(1, 3))]
+        after = [_random_batched_frame(rng)
+                 for _ in range(rng.randint(1, 3))]
+        poison = b"cno_such_module_xyz\nGhost\n."  # GLOBAL opcode, bad module
+        stream = (b"".join(encode_frame(f) for f in before)
+                  + struct.pack(">I", len(poison)) + poison
+                  + b"".join(encode_frame(f) for f in after))
+        dec = FrameDecoder()
+        out, i = [], 0
+        while i < len(stream):
+            j = min(len(stream), i + rng.randint(1, 33))
+            out.extend(dec.feed(stream[i:j]))
+            i = j
+        assert len(out) == len(before) + 1 + len(after)
+        kinds = [f["kind"] for f in out]
+        assert kinds[len(before)] == "undecodable"
+        for got, want in zip(out[:len(before)] + out[len(before) + 1:],
+                             before + after):
+            assert got["kind"] == want["kind"]
 
 
 # ---------------------------------------------------------------------------
@@ -559,13 +698,20 @@ def flaky_battery_run(seed):
         delay=rng.uniform(0.0, 0.3),
         max_delay=0.01,
     )
+    # dispatch fast-path knobs ride the same battery: descriptor caching
+    # and frame batching must preserve exact-once under every fault mix
+    # (drop/dup/reorder now also hit register_fn / work_batch /
+    # done_batch frames)
+    batch_frames = rng.choice([1, 1, 2, 4])
+    fn_cache = rng.random() < 0.75
     rec = Recorder(per_item_sleep=rng.uniform(0.5, 2.0) * 2e-5)
     rt = HeteroRuntime()
     for i in range(n_remote):
         rt.register_unit(
             f"r{i}", WorkerKind.CC, work_fn=rec,
             backend=loopback_unit(f"r{i}", flaky_seed=seed * 37 + i * 1000,
-                                  **faults),
+                                  batch_frames=batch_frames,
+                                  fn_cache=fn_cache, **faults),
         )
     for i in range(n_local):
         rt.register_unit(f"cc{i}", WorkerKind.CC, work_fn=rec)
@@ -633,6 +779,336 @@ class TestFlakyBattery:
         assert rep_r.items == rep_i.items == n_items
         assert_exact_tiling(rep_r.coverage, n_items)
         assert_exact_tiling(rep_i.coverage, n_items)
+
+
+# ---------------------------------------------------------------------------
+# dispatch fast path (ISSUE 8): session-cached work descriptors and
+# chunk-batched frames — wire-shape, recovery, and accounting contracts
+# ---------------------------------------------------------------------------
+class _DropFirstRegistration(FrameTap):
+    """Swallows the first register_fn frame (still recorded in .sent)."""
+
+    def _forward(self, frame):
+        if frame.get("kind") == "register_fn" and not getattr(
+                self, "_dropped", False):
+            self._dropped = True
+            return
+        self.inner.send(frame)
+
+
+def _drive_direct(unit, chunks, work_fn):
+    """Submit every chunk up-front (pipelined), wait for all completions."""
+    bus = CompletionBus()
+    unit.start(bus)
+    try:
+        for c in chunks:
+            unit.submit(c, work_fn)
+        unit.flush()
+        recs = []
+        deadline = time.perf_counter() + 30.0
+        while len(recs) < len(chunks):
+            assert time.perf_counter() < deadline, (
+                f"only {len(recs)}/{len(chunks)} completions arrived")
+            bus.wait(timeout=1.0)
+            recs.extend(bus.drain())
+        return recs
+    finally:
+        unit.close()
+
+
+def _work_items(tap):
+    """All work items the client ever put on the wire, batched or not."""
+    items = []
+    for f in tap.frames("submit"):
+        items.append(f)
+    for f in tap.frames("work_batch"):
+        items.extend(f["items"])
+    return items
+
+
+class TestDescriptorCache:
+    def test_fn_registered_once_per_session(self):
+        unit, tap, _w = tapped_loopback_unit("u0")
+        fn = SleepWork(0.0)
+        recs = _drive_direct(
+            unit, [Chunk(i, i + 1, "u0") for i in range(6)], fn)
+        assert len(recs) == 6 and all(r.error is None for r in recs)
+        assert len(tap.frames("register_fn")) == 1
+        items = _work_items(tap)
+        assert len(items) >= 6
+        assert all("fn" not in it and "fn_ref" in it for it in items), (
+            "work items must reference the cached descriptor, not inline it")
+
+    def test_content_hash_shares_and_invalidates_registrations(self):
+        unit, tap, _w = tapped_loopback_unit("u0")
+        bus = CompletionBus()
+        unit.start(bus)
+        try:
+            def one(chunk, fn):
+                unit.submit(chunk, fn)
+                unit.flush()
+                while not bus.drain():
+                    bus.wait(timeout=5.0)
+
+            # two *distinct objects* with equal pickled content: one reg
+            one(Chunk(0, 1, "u0"), SleepWork(0.0))
+            one(Chunk(1, 2, "u0"), SleepWork(0.0))
+            assert len(tap.frames("register_fn")) == 1
+            # changed content hashes differently: re-registers
+            one(Chunk(2, 3, "u0"), SleepWork(1e-9))
+            regs = tap.frames("register_fn")
+            assert len(regs) == 2
+            assert regs[0]["fn_id"] != regs[1]["fn_id"]
+            assert all(r["fn_id"].startswith("h:") for r in regs)
+        finally:
+            unit.close()
+
+    def test_unpicklable_fn_falls_back_to_identity_id(self):
+        # loopback lambdas/closures cannot be content-hashed; they get a
+        # session-stable identity id and still ride the cache path
+        unit, tap, _w = tapped_loopback_unit("u0")
+        hits = []
+        fn = lambda c: hits.append(c.start)  # noqa: E731
+        recs = _drive_direct(
+            unit, [Chunk(i, i + 1, "u0") for i in range(3)], fn)
+        assert len(recs) == 3 and sorted(hits) == [0, 1, 2]
+        regs = tap.frames("register_fn")
+        assert len(regs) == 1 and regs[0]["fn_id"].startswith("r:")
+
+    def test_fn_cache_off_inlines_the_fn(self):
+        unit, tap, _w = tapped_loopback_unit("u0", fn_cache=False)
+        recs = _drive_direct(
+            unit, [Chunk(i, i + 1, "u0") for i in range(4)], SleepWork(0.0))
+        assert len(recs) == 4
+        assert not tap.frames("register_fn")
+        items = _work_items(tap)
+        assert all("fn" in it and "fn_ref" not in it for it in items)
+
+    def test_dropped_registration_before_batched_work_recovers(self):
+        # the ISSUE's directed case: register_fn lost, then a work_batch
+        # arrives referencing it — the worker NACKs unknown_fn, the
+        # client re-registers and retransmits, exact-once is preserved
+        unit, tap, _w = tapped_loopback_unit(
+            "u0", batch_frames=4, tap_cls=_DropFirstRegistration)
+        rec = Recorder()
+        chunks = [Chunk(i * 2, i * 2 + 2, "u0") for i in range(4)]
+        recs = _drive_direct(unit, chunks, rec)
+        assert len(recs) == 4 and all(r.error is None for r in recs)
+        rec.assert_exactly_once(8)
+        assert len(tap.frames("register_fn")) >= 2, (
+            "client never re-registered after the unknown_fn NACK")
+        assert tap.frames("work_batch"), "batching was not engaged"
+
+    def test_worker_registry_loss_mid_session_recovers(self):
+        # a worker that lost its per-session fn registry (restart) NACKs
+        # the next cached reference; the client re-ships the descriptor
+        unit, tap, worker = tapped_loopback_unit("u0")
+        bus = CompletionBus()
+        unit.start(bus)
+        try:
+            fn = SleepWork(0.0)
+            unit.submit(Chunk(0, 2, "u0"), fn)
+            unit.flush()
+            while not bus.drain():
+                bus.wait(timeout=5.0)
+            with worker._lock:
+                worker._fns.clear()  # simulate restart-shaped amnesia
+            unit.submit(Chunk(2, 4, "u0"), fn)
+            unit.flush()
+            recs = []
+            deadline = time.perf_counter() + 10.0
+            while not recs:
+                assert time.perf_counter() < deadline
+                bus.wait(timeout=1.0)
+                recs = bus.drain()
+            assert recs[0].error is None
+            assert len(tap.frames("register_fn")) == 2
+        finally:
+            unit.close()
+
+
+class TestBatchedFrames:
+    def test_full_batch_coalesces_into_one_work_batch(self):
+        unit, tap, _w = tapped_loopback_unit("u0", batch_frames=4)
+        rec = Recorder()
+        chunks = [Chunk(i * 3, i * 3 + 3, "u0") for i in range(4)]
+        recs = _drive_direct(unit, chunks, rec)
+        assert len(recs) == 4
+        rec.assert_exactly_once(12)
+        batches = tap.frames("work_batch")
+        assert len(batches) == 1 and len(batches[0]["items"]) == 4
+        assert not tap.frames("submit"), (
+            "chunks leaked out as singleton frames despite batching")
+
+    def test_partial_batch_stays_buffered_until_flush(self):
+        unit, tap, _w = tapped_loopback_unit("u0", batch_frames=8)
+        bus = CompletionBus()
+        unit.start(bus)
+        try:
+            for i in range(3):
+                unit.submit(Chunk(i, i + 1, "u0"), SleepWork(0.0))
+            assert not _work_items(tap), (
+                "a partial batch went on the wire before flush()")
+            unit.flush()
+            recs = []
+            deadline = time.perf_counter() + 10.0
+            while len(recs) < 3:
+                assert time.perf_counter() < deadline
+                bus.wait(timeout=1.0)
+                recs.extend(bus.drain())
+            batches = tap.frames("work_batch")
+            assert len(batches) == 1 and len(batches[0]["items"]) == 3
+        finally:
+            unit.close()
+
+    def test_batch_frames_1_keeps_legacy_frame_shapes(self):
+        # parity satellite: a batch_frames=1, fn_cache=off session must
+        # put exactly the pre-fast-path frames on the wire...
+        unit, tap, _w = tapped_loopback_unit("u0", fn_cache=False)
+        rec_legacy = Recorder()
+        chunks = [Chunk(i * 4, i * 4 + 4, "u0") for i in range(5)]
+        _drive_direct(unit, chunks, rec_legacy)
+        kinds = set(tap.kinds())
+        assert kinds <= {"hello", "submit", "bye"}, f"new kinds leaked: {kinds}"
+        for f in tap.frames("submit"):
+            assert {"kind", "unit", "seq", "chunk", "fn",
+                    "t_submit", "floor"} <= set(f)
+        # ...and produce results identical to the batched+cached path
+        unit2, _tap2, _w2 = tapped_loopback_unit(
+            "u0", batch_frames=4, fn_cache=True)
+        rec_fast = Recorder()
+        _drive_direct(unit2, chunks, rec_fast)
+        assert rec_fast.counts == rec_legacy.counts
+
+    def test_batched_cached_exact_once_under_faults(self):
+        # directed heavy-fault run with the fast path fully on: drops,
+        # dups and reorders now hit register_fn/work_batch/done_batch
+        rec = Recorder(per_item_sleep=1e-5)
+        rt = HeteroRuntime()
+        for i in range(2):
+            rt.register_unit(
+                f"r{i}", WorkerKind.CC, work_fn=rec,
+                backend=loopback_unit(f"r{i}", flaky_seed=4242 + i,
+                                      batch_frames=4, fn_cache=True,
+                                      drop=0.25, duplicate=0.25,
+                                      reorder=0.25, delay=0.2,
+                                      max_delay=0.01),
+            )
+        rep = rt.parallel_for(num_items=160, policy="multidynamic",
+                              engine="interrupt", acc_chunk=8)
+        assert rep.items == 160
+        assert_exact_tiling(rep.coverage, 160)
+        rec.assert_exactly_once(160)
+        assert rep.wire_latency is not None
+        times = [e["t"] for e in (rep.events or [])]
+        assert times == sorted(times)
+
+
+class _NullSink:
+    """Transport stub for white-box accounting tests: swallows sends."""
+
+    closed = False
+
+    def send(self, frame):
+        pass
+
+    def recv(self, timeout=None):
+        return None
+
+    def close(self):
+        pass
+
+
+class TestWireAccounting:
+    """RunReport.wire_latency on synthetic done-frames: a batched frame's
+    transit is attributed per chunk — counted once per frame, not once
+    per chunk — with no clocks involved (fixed synthetic timestamps)."""
+
+    @staticmethod
+    def _unit_with_pending(batch_n, t_submit, t_sent):
+        from repro.core.backends import BackendUnit
+
+        unit = RemoteUnit("u0", transport=_NullSink(), batch_frames=batch_n)
+        bus = CompletionBus()
+        BackendUnit.start(unit, bus)  # skip handshake: frames are synthetic
+        for seq in range(batch_n):
+            unit._pending[seq] = {
+                "seq": seq, "chunk": Chunk(seq * 4, seq * 4 + 4, "u0"),
+                "fn": SleepWork(0.0), "t_submit": t_submit,
+                "t_sent": t_sent, "sends": 1,
+                "next_resend": float("inf"), "batch_n": batch_n,
+            }
+        return unit, bus
+
+    def test_batched_transit_counted_once_across_the_frame(self):
+        unit, bus = self._unit_with_pending(3, t_submit=100.0, t_sent=100.5)
+        transit = 0.4  # t_accept - t_sent, shared by all 3 chunks
+        queue_waits = [0.0, 0.1, 0.2]  # t_start - t_accept, per chunk
+        unit._on_frame({"kind": "done_batch", "unit": "u0", "items": [
+            {"seq": s, "chunk": Chunk(s * 4, s * 4 + 4, "u0"),
+             "elapsed": 0.01, "t_accept": 100.5 + transit,
+             "t_start": 100.5 + transit + queue_waits[s],
+             "error": None, "result": None}
+            for s in range(3)]})
+        assert len(unit.wire_latencies) == 3
+        # each chunk: 1/3 of the frame transit + its own queue wait
+        for wire, qw in zip(unit.wire_latencies, queue_waits):
+            assert wire == pytest.approx(transit / 3 + qw)
+        # summed over the batch the transit appears exactly once
+        assert sum(unit.wire_latencies) == pytest.approx(
+            transit + sum(queue_waits))
+        recs = bus.drain()
+        assert [r.dispatch_latency for r in recs] == pytest.approx(
+            [100.5 + transit + qw - 100.0 for qw in queue_waits])
+        assert unit.local_queue_latencies == pytest.approx([0.5] * 3)
+
+    def test_singleton_reduces_to_legacy_attribution(self):
+        # batch_n == 1: wire == t_start - t_sent, exactly the pre-batching
+        # definition (transit/1 + queue wait telescopes)
+        unit, bus = self._unit_with_pending(1, t_submit=50.0, t_sent=50.2)
+        unit._on_frame({"kind": "done", "unit": "u0", "seq": 0,
+                        "chunk": Chunk(0, 4, "u0"), "elapsed": 0.01,
+                        "t_accept": 50.6, "t_start": 50.9,
+                        "error": None, "result": None})
+        assert unit.wire_latencies == pytest.approx([50.9 - 50.2])
+        assert len(bus.drain()) == 1
+
+    def test_duplicate_done_items_do_not_double_count(self):
+        unit, bus = self._unit_with_pending(2, t_submit=10.0, t_sent=10.1)
+        frame = {"kind": "done_batch", "unit": "u0", "items": [
+            {"seq": s, "chunk": Chunk(s * 4, s * 4 + 4, "u0"),
+             "elapsed": 0.01, "t_accept": 10.3, "t_start": 10.3,
+             "error": None, "result": None} for s in range(2)]}
+        unit._on_frame(frame)
+        unit._on_frame(frame)  # duplicated done_batch (flaky medium)
+        assert len(unit.wire_latencies) == 2
+        assert len(bus.drain()) == 2
+
+
+class TestRemoteSpecKnobs:
+    def test_spec_query_string_sets_fast_path_knobs(self):
+        unit = make_backend("remote:127.0.0.1:9?batch_frames=4&fn_cache=0",
+                            "r0")
+        assert isinstance(unit, RemoteUnit)
+        assert unit.batch_frames == 4 and unit.capacity == 4
+        assert unit.fn_cache is False
+
+    def test_spec_defaults_are_conservative(self):
+        unit = make_backend("remote:127.0.0.1:9", "r0")
+        assert unit.batch_frames == 1 and unit.capacity == 1
+        assert unit.fn_cache is True
+
+    def test_unknown_knob_rejected_with_listing(self):
+        with pytest.raises(ValueError, match="batch_frames"):
+            make_backend("remote:127.0.0.1:9?turbo=1", "r0")
+
+    def test_non_integer_knob_value_rejected(self):
+        with pytest.raises(ValueError):
+            make_backend("remote:127.0.0.1:9?batch_frames=lots", "r0")
+
+    def test_batch_frames_must_be_positive(self):
+        with pytest.raises(ValueError, match="batch_frames"):
+            make_backend("remote:127.0.0.1:9?batch_frames=0", "r0")
 
 
 # ---------------------------------------------------------------------------

@@ -32,6 +32,13 @@ applies to fresh runs and the committed artifact alike):
   acceptance number: learned splits within 10% of oracle after one
   warmup run.
 
+``bench_dispatch/v1`` checks (``benchmarks/bench_dispatch.py``): full
+transport x mode coverage with positive metrics, loopback batched
+``dispatch_us`` <= baseline, a ``speedups`` block consistent with the
+configs, and — with ``--min-speedup S`` — socket batched/baseline
+``chunks_per_sec`` >= S.  ``--schema NAME`` pins the expected schema so
+CI cannot silently validate the wrong artifact kind.
+
 Exit code 0 on success, 1 with a diagnostic on any violation.
 """
 
@@ -51,6 +58,93 @@ from repro.serving.loadgen import METRIC_KEYS  # noqa: E402
 
 SCHEMA = "bench_serving/v1"
 COSTMODEL_SCHEMA = "bench_costmodel/v1"
+DISPATCH_SCHEMA = "bench_dispatch/v1"
+
+_DISPATCH_TRANSPORTS = ("loopback", "socket", "flaky")
+_DISPATCH_MODES = ("baseline", "cached", "batched")
+
+
+def check_dispatch(doc: dict, *, min_speedup: float = 0.0) -> list:
+    """Return violation strings for a ``bench_dispatch/v1`` artifact.
+
+    Structural checks hold for fresh ``--quick`` smoke runs and the
+    committed artifact alike; two performance gates ride along:
+
+    * loopback ``batched`` must not cost more per dispatched chunk than
+      ``baseline`` (``dispatch_us`` ordering — the pinned local config
+      where no network noise can excuse a regression);
+    * with ``--min-speedup S``: socket batched/baseline
+      ``chunks_per_sec`` >= S (CI applies 2.0 to the committed
+      artifact only — the ISSUE's acceptance line).
+    """
+    errs = []
+    if doc.get("schema") != DISPATCH_SCHEMA:
+        errs.append(f"schema is {doc.get('schema')!r}, want {DISPATCH_SCHEMA!r}")
+    params = doc.get("params")
+    if not isinstance(params, dict):
+        errs.append("missing 'params' block")
+    else:
+        for field in ("n_chunks", "repeats", "batch_frames",
+                      "payload_bytes", "seed"):
+            if field not in params:
+                errs.append(f"params missing {field!r}")
+    configs = doc.get("configs")
+    if not isinstance(configs, list) or not configs:
+        return errs + ["configs must be a non-empty list"]
+
+    by_key = {}
+    for i, entry in enumerate(configs):
+        key = (entry.get("transport"), entry.get("mode"))
+        if key in by_key:
+            errs.append(f"configs[{i}] duplicates {key}")
+            continue
+        by_key[key] = entry
+        for field in ("dispatch_us", "wire_us", "chunks_per_sec", "wall_s"):
+            v = entry.get(field)
+            if not isinstance(v, (int, float)) or not v > 0:
+                errs.append(f"configs[{i}] {key}: {field} must be positive, "
+                            f"got {v!r}")
+        if entry.get("mode") == "baseline":
+            if entry.get("fn_cache") or entry.get("batch_frames") != 1:
+                errs.append(f"configs[{i}] baseline must run fn_cache=off, "
+                            "batch_frames=1")
+        if entry.get("mode") == "batched" and not entry.get(
+                "batch_frames", 0) >= 4:
+            errs.append(f"configs[{i}] batched mode needs batch_frames>=4, "
+                        f"got {entry.get('batch_frames')!r}")
+    missing = [(t, m) for t in _DISPATCH_TRANSPORTS
+               for m in _DISPATCH_MODES if (t, m) not in by_key]
+    if missing:
+        return errs + [f"missing configs: {missing}"]
+
+    lo_base = by_key[("loopback", "baseline")]
+    lo_batch = by_key[("loopback", "batched")]
+    if not lo_batch["dispatch_us"] <= lo_base["dispatch_us"]:
+        errs.append(
+            f"loopback batched dispatch_us {lo_batch['dispatch_us']:.1f} "
+            f"exceeds baseline {lo_base['dispatch_us']:.1f} — batching "
+            "regressed per-chunk dispatch cost on the pinned local config"
+        )
+    speedups = doc.get("speedups")
+    if not isinstance(speedups, dict):
+        errs.append("missing 'speedups' block")
+    else:
+        for t in _DISPATCH_TRANSPORTS:
+            want = (by_key[(t, "batched")]["chunks_per_sec"]
+                    / by_key[(t, "baseline")]["chunks_per_sec"])
+            got = speedups.get(t)
+            if not isinstance(got, (int, float)) or abs(got - want) > 1e-6 * want:
+                errs.append(f"speedups[{t!r}] {got!r} inconsistent with "
+                            f"configs ({want:.4f})")
+    if min_speedup > 0:
+        sock = (by_key[("socket", "batched")]["chunks_per_sec"]
+                / by_key[("socket", "baseline")]["chunks_per_sec"])
+        if not sock >= min_speedup:
+            errs.append(
+                f"socket batched/baseline speedup {sock:.2f}x below the "
+                f"required {min_speedup:.2f}x"
+            )
+    return errs
 
 
 def check_costmodel(doc: dict, *, max_gap: float = 0.10) -> list:
@@ -171,12 +265,24 @@ def main(argv: list) -> int:
     ap.add_argument("--max-gap", type=float, default=0.10,
                     help="bench_costmodel: per-seed learned-vs-oracle "
                          "makespan budget (default 0.10)")
+    ap.add_argument("--schema", metavar="NAME",
+                    help="fail unless the artifact declares exactly this "
+                         "schema (e.g. bench_dispatch/v1)")
+    ap.add_argument("--min-speedup", type=float, default=0.0,
+                    help="bench_dispatch: required socket batched/baseline "
+                         "chunks_per_sec ratio (0 = structural checks only)")
     args = ap.parse_args(argv)
     with open(args.path) as fh:
         doc = json.load(fh)
     schema = doc.get("schema")
+    if args.schema and schema != args.schema:
+        print(f"check_bench: schema is {schema!r}, want {args.schema!r}",
+              file=sys.stderr)
+        return 1
     if schema == COSTMODEL_SCHEMA:
         errs = check_costmodel(doc, max_gap=args.max_gap)
+    elif schema == DISPATCH_SCHEMA:
+        errs = check_dispatch(doc, min_speedup=args.min_speedup)
     else:
         errs = check(doc, require_continuous_wins=args.require_continuous_wins)
     for e in errs:
