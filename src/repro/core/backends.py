@@ -541,12 +541,16 @@ def make_backend(spec: Union[str, BackendUnit, None], name: str) -> BackendUnit:
                         f"unknown remote backend knob {key!r} in {spec!r}: "
                         "valid knobs are " + ", ".join(REMOTE_SPEC_KNOBS)
                     )
+                if key == "batch_frames" and value == "auto":
+                    opts[key] = "auto"
+                    continue
                 try:
                     opts[key] = int(value)
                 except ValueError:
                     raise ValueError(
                         f"remote backend knob {key}={value!r} in {spec!r} "
                         "must be an integer"
+                        + (" or 'auto'" if key == "batch_frames" else "")
                     ) from None
         if not address:
             raise ValueError(
@@ -631,6 +635,7 @@ class BackendEngine:
         self._own_units = set()               # started here -> closed here
         self._all_units = dict(units)         # includes retired units (stats)
         self._inflight: Dict[str, int] = {}   # unit -> chunks in flight
+        self._last_caps: Dict[str, int] = {}  # capacity last synced to sched
         self._leaving: set = set()
         self._straggled: set = set()
         self._errors: List[BaseException] = []
@@ -661,6 +666,15 @@ class BackendEngine:
             return False
         issued = False
         cap = self._capacity(name)
+        # Adaptive units (batch_frames="auto") re-size their capacity at
+        # flush boundaries; the scheduler's in-flight cap must follow or
+        # next_chunk raises "requested a chunk while busy" the moment the
+        # unit grows past the capacity recorded at run start.
+        if cap != self._last_caps.get(name):
+            self._last_caps[name] = cap
+            set_cap = getattr(self.sched, "set_capacity", None)
+            if set_cap is not None:
+                set_cap(name, cap)
         while self._inflight.get(name, 0) < cap:
             if self._errors:
                 break
@@ -821,8 +835,9 @@ class BackendEngine:
         for name, unit in self.units.items():
             unit.start(self.bus)
             self._own_units.add(name)
+            self._last_caps[name] = self._capacity(name)
             if set_cap is not None:
-                set_cap(name, self._capacity(name))
+                set_cap(name, self._last_caps[name])
         try:
             self._apply_due_events()
             self._dispatch_idle()
@@ -883,4 +898,19 @@ class BackendEngine:
             lats = getattr(unit, "wire_latencies", None)
             if lats:
                 out[name] = sum(lats) / len(lats)
+        return out or None
+
+    def frame_batching(self) -> Optional[Dict[str, int]]:
+        """Effective frame-coalescing width per transport unit at run end.
+
+        Fixed ``batch_frames=N`` units report N; ``batch_frames="auto"``
+        units report the adaptive value they converged to.  ``None`` when
+        no transport unit took part (local units have no frames to
+        batch).
+        """
+        out: Dict[str, int] = {}
+        for name, unit in self._all_units.items():
+            width = getattr(unit, "effective_batch_frames", None)
+            if width is not None:
+                out[name] = int(width)
         return out or None

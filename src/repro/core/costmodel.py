@@ -97,6 +97,25 @@ class CostEntry:
             return None
         return items / self.throughput
 
+    def overhead(self) -> float:
+        """Fixed per-chunk seconds before work lands on the unit.
+
+        Dispatch latency (submit -> executing) already *contains* the
+        outbound wire time for remote units, so the two terms are not
+        additive: take the larger of the learned values.  0.0 when the
+        backend layer has produced no latency sample (simulated runs).
+        """
+        return max(self.dispatch_latency or 0.0, self.wire_latency or 0.0, 0.0)
+
+    def predict(self, items: int, *, chunks: int = 1) -> Optional[float]:
+        """Predicted completion seconds for ``items`` issued as ``chunks``
+        dispatches: execution time plus per-chunk dispatch+wire overhead.
+        None until a throughput has been learned."""
+        exec_s = self.seconds_for(items)
+        if exec_s is None:
+            return None
+        return exec_s + max(int(chunks), 0) * self.overhead()
+
 
 class CostModel:
     """EWMA cost store learned from :class:`RunReport` history.
@@ -231,15 +250,30 @@ class CostModel:
         """True when every unit has a learned throughput for ``kernel``."""
         return len(self.speeds(units, kernel)) == len(set(units))
 
+    def overheads(self, units: Sequence[str], kernel: str) -> Dict[str, float]:
+        """Learned per-chunk dispatch+wire seconds for the given units.
+
+        Every requested unit gets an entry (0.0 when nothing has been
+        learned) — the latency-aware split treats missing data as free
+        dispatch rather than excluding the unit.
+        """
+        out: Dict[str, float] = {}
+        for name in units:
+            entry = self.lookup(name, kernel)
+            out[name] = entry.overhead() if entry is not None else 0.0
+        return out
+
     def fleet_throughput(self, kernel: str) -> Optional[float]:
         """Mean learned items/s across units for ``kernel`` (None if no
-        data) — the aggregate a serving admission policy predicts with."""
+        data) — the aggregate a serving admission policy predicts with.
+        A measured 0.0 (stalled unit) counts as an observation; the
+        result is floored so callers can divide by it."""
         with self._lock:
             vals = [e.throughput for (u, k), e in self._entries.items()
-                    if k == kernel and e.throughput]
+                    if k == kernel and e.throughput is not None]
         if not vals:
             return None
-        return sum(vals) / len(vals)
+        return max(sum(vals) / len(vals), 1e-9)
 
     def kernels(self) -> List[str]:
         with self._lock:
@@ -289,7 +323,9 @@ class CostModel:
             for raw in doc.get("entries", []):
                 entry = CostEntry(**raw)
                 entries[(entry.unit, entry.kernel)] = entry
-        except BaseException as exc:
+        except Exception as exc:
+            # Exception, not BaseException: a Ctrl-C or SystemExit during
+            # load must propagate, not be swallowed into a cold start.
             warnings.warn(
                 f"cost store {path!r} unusable ({exc}); cold-starting — "
                 "learned splits fall back to adaptive until re-observed",

@@ -100,6 +100,12 @@ class RunReport:
     # worker-side monotonic clocks, so only meaningful when both share a
     # machine (worker subprocesses).
     wire_latency: Optional[Dict[str, float]] = None
+    # Effective frame-coalescing width per transport-backed unit at run
+    # end.  For a fixed ``batch_frames=N`` RemoteUnit this is just N; for
+    # ``batch_frames="auto"`` it is the converged adaptive value (learned
+    # wire transit vs. per-chunk service time, re-evaluated at flush
+    # boundaries).  None when no transport unit took part in the run.
+    batch_frames: Optional[Dict[str, int]] = None
 
     @property
     def throughput(self) -> float:

@@ -416,6 +416,7 @@ def _build_report(
     sched: _TrackedScheduler, wall: float,
     dispatch: Optional[Dict[str, float]] = None,
     wire: Optional[Dict[str, float]] = None,
+    batch_frames: Optional[Dict[str, int]] = None,
 ) -> RunReport:
     states = sched.workers
     return RunReport(
@@ -429,6 +430,7 @@ def _build_report(
         coverage=sched.coverage(),
         dispatch_latency=dispatch,
         wire_latency=wire,
+        batch_frames=batch_frames,
     )
 
 
@@ -519,8 +521,15 @@ class HeteroRuntime:
             learned = (self.cost_model.speeds(names, kernel)
                        if self.cost_model is not None else {})
             if len(learned) == len(names):
+                # Latency-aware pre-split: size shares to equalize
+                # *predicted completion time* (execution + learned
+                # dispatch/wire overhead), so a high-latency remote unit
+                # gets fewer items than its raw throughput share.  Runs
+                # with no latency samples (SimulatedClock) degrade to the
+                # pure throughput-proportional split.
                 inner = OracleStaticScheduler(
-                    num_items, {n: learned[n] for n in names}
+                    num_items, {n: learned[n] for n in names},
+                    overheads=self.cost_model.overheads(names, kernel),
                 )
             else:
                 inner = MultiDynamicScheduler(
@@ -855,7 +864,8 @@ class HeteroRuntime:
                     "its worker"
                 )
             rep = _build_report(sched, wall, dispatch=eng.dispatch_latency(),
-                                wire=eng.wire_latency())
+                                wire=eng.wire_latency(),
+                                batch_frames=eng.frame_batching())
             if eng.events:
                 rep.events = eng.events
         else:
@@ -1237,6 +1247,7 @@ def _merge_shard_reports(reports: List[RunReport]) -> RunReport:
     per_busy: Dict[str, float] = {}
     per_dispatch: Dict[str, float] = {}
     per_wire: Dict[str, float] = {}
+    per_batch: Dict[str, int] = {}
     coverage: List[tuple] = []
     events: List[dict] = []
     for k, rep in enumerate(reports):
@@ -1250,6 +1261,8 @@ def _merge_shard_reports(reports: List[RunReport]) -> RunReport:
             per_dispatch[f"s{k}/{n}"] = v
         for n, v in (rep.wire_latency or {}).items():
             per_wire[f"s{k}/{n}"] = v
+        for n, v in (rep.batch_frames or {}).items():
+            per_batch[f"s{k}/{n}"] = v
         coverage.extend(rep.coverage or [])
         for ev in rep.events or []:
             events.append({**ev, "unit": f"s{k}/{ev['unit']}", "shard": k})
@@ -1268,4 +1281,5 @@ def _merge_shard_reports(reports: List[RunReport]) -> RunReport:
         shard_reports=list(reports),
         dispatch_latency=per_dispatch or None,
         wire_latency=per_wire or None,
+        batch_frames=per_batch or None,
     )

@@ -36,18 +36,57 @@ __all__ = [
     "StaticScheduler",
     "OracleStaticScheduler",
     "proportional_split",
+    "latency_aware_split",
 ]
+
+# A measured throughput of exactly 0.0 is still a measurement (the unit is
+# stalled), not an invitation to re-apply the optimistic bootstrap prior;
+# the floor only protects the arithmetic downstream from division blowups.
+THROUGHPUT_FLOOR = 1e-9
 
 
 def proportional_split(num_items: int, throughputs: Dict[str, float]) -> Dict[str, int]:
     """Split ``[0, num_items)`` proportionally to per-unit throughputs.
 
     Worker order follows ``throughputs`` insertion order; every non-last
-    share is rounded then clamped so rounding can never overshoot the
-    space, and the last worker absorbs the exact remainder — the split
-    always tiles the space.  Shared by :class:`OracleStaticScheduler`
-    (user-supplied speeds) and the learned policy in
-    :mod:`repro.core.runtime` (measured speeds from the cost model).
+    share is rounded (banker's ``round``) then clamped so rounding can
+    never overshoot the space, and the last worker absorbs the exact
+    remainder — the split always tiles the space.  Whenever the space has
+    at least one item per worker, every positive-throughput worker is
+    guaranteed a non-empty share (a slow-but-live unit must not round to
+    zero and then idle for the whole run).  Shared by
+    :class:`OracleStaticScheduler` (user-supplied speeds) and the learned
+    policy in :mod:`repro.core.runtime` (measured speeds from the cost
+    model).  Equivalent to :func:`latency_aware_split` at zero overhead.
+    """
+    return latency_aware_split(num_items, throughputs)
+
+
+def latency_aware_split(
+    num_items: int,
+    throughputs: Dict[str, float],
+    overheads: Optional[Dict[str, float]] = None,
+) -> Dict[str, int]:
+    """Split ``[0, num_items)`` to equalize *predicted completion time*.
+
+    ``overheads`` maps worker -> fixed seconds the worker pays before its
+    share completes (learned dispatch + wire latency from the cost model);
+    missing/None entries mean zero.  The ideal share solves the
+    water-filling problem: find the completion level ``tau`` with
+
+        sum_i  T_i * max(tau - L_i, 0)  =  num_items
+
+    so every participating worker finishes at ``n_i / T_i + L_i == tau``,
+    and a worker whose overhead alone exceeds ``tau`` drops out of the
+    level computation (it would need a negative share).  With all-zero
+    overheads this degenerates to a pure throughput-proportional split.
+
+    Rounding and guarantees are shared with :func:`proportional_split`:
+    insertion-order banker's rounding with the last *positive-throughput*
+    worker absorbing the remainder (a stalled unit never absorbs), and —
+    whenever ``num_items >= len(throughputs)`` — at least 1 item for
+    every positive-throughput worker (donated from the largest share,
+    first-in-order on ties).
     """
     if num_items < 0:
         raise ValueError(f"num_items must be non-negative, got {num_items}")
@@ -56,16 +95,49 @@ def proportional_split(num_items: int, throughputs: Dict[str, float]) -> Dict[st
     total = sum(throughputs.values())
     if total <= 0:
         raise ValueError(f"throughputs must sum positive, got {total}")
+    names = list(throughputs)
+    if num_items == 0:
+        return {w: 0 for w in names}
+    lat = {w: max(float((overheads or {}).get(w) or 0.0), 0.0) for w in names}
+
+    # Water-fill the completion level over positive-throughput workers,
+    # dropping the highest-overhead worker while it sits above the level.
+    shares = {w: 0.0 for w in names}
+    active = [w for w in names if throughputs[w] > 0]
+    level = 0.0
+    while active:
+        t_sum = sum(throughputs[w] for w in active)
+        level = (num_items + sum(throughputs[w] * lat[w] for w in active)) / t_sum
+        over = [w for w in active if lat[w] >= level]
+        if not over:
+            break
+        worst = max(over, key=lambda w: lat[w])
+        active.remove(worst)
+    for w in active:
+        shares[w] = throughputs[w] * (level - lat[w])
+
+    # Banker's rounding in insertion order; the *last live* worker absorbs
+    # the remainder (never a zero-throughput one — handing a stalled unit
+    # the rounding slack would strand those items).
+    absorber = [w for w in names if throughputs[w] > 0][-1]
     sizes: Dict[str, int] = {}
     start = 0
-    items = list(throughputs.items())
-    for i, (w, t) in enumerate(items):
-        if i == len(items) - 1:
-            size = num_items - start
-        else:
-            size = min(int(round(num_items * t / total)), num_items - start)
+    for w in names:
+        size = min(int(round(shares[w])), num_items - start)
         sizes[w] = size
         start += size
+    sizes[absorber] += num_items - start
+
+    # Starvation guarantee: with at least one item per worker available,
+    # every positive-throughput worker gets a non-empty share.  Donors are
+    # the largest shares (first in insertion order on ties); by pigeonhole
+    # a >=2-item donor always exists while some live worker sits at zero.
+    if num_items >= len(names):
+        for w in names:
+            while throughputs[w] > 0 and sizes[w] < 1:
+                donor = max(names, key=lambda d: sizes[d])
+                sizes[donor] -= 1
+                sizes[w] += 1
     return sizes
 
 
@@ -174,13 +246,15 @@ class MultiDynamicScheduler:
                 raise ValueError(f"duplicate worker {name!r}")
             self._workers[name] = WorkerState(name=name, kind=kind, throughput=throughput)
 
-    def abort(self, worker: str) -> Optional[Chunk]:
+    def abort(self, worker: str) -> List[Chunk]:
         """Drop ``worker``'s in-flight chunks without counting them.
 
         The elastic layer calls this when a unit departs mid-chunk; the
-        caller (the tracked facade in :mod:`repro.core.runtime`) owns
-        requeueing the dropped spans so coverage stays exact-once.
-        Returns the first (oldest) aborted chunk, or ``None``.
+        caller owns requeueing the dropped spans so coverage stays
+        exact-once.  Returns *all* aborted chunks oldest-first — with
+        ``set_capacity > 1`` a pipelined worker may hold several in
+        flight, and returning only the oldest would silently lose
+        coverage for any driver that isn't the tracked runtime facade.
         """
         with self._lock:
             state = self._workers.get(worker)
@@ -188,14 +262,14 @@ class MultiDynamicScheduler:
             self._issue_times.pop(worker, None)
             if state is not None:
                 state.busy = False
-            return chunks[0] if chunks else None
+            return list(chunks) if chunks else []
 
-    def remove_worker(self, name: str) -> Optional[Chunk]:
-        """Unregister a unit mid-run (elastic leave); returns its aborted chunk."""
-        chunk = self.abort(name)
+    def remove_worker(self, name: str) -> List[Chunk]:
+        """Unregister a unit mid-run (elastic leave); returns all its aborted chunks."""
+        chunks = self.abort(name)
         with self._lock:
             self._workers.pop(name, None)
-        return chunk
+        return chunks
 
     @property
     def workers(self) -> Dict[str, WorkerState]:
@@ -206,10 +280,13 @@ class MultiDynamicScheduler:
     # ------------------------------------------------------------------
     def _estimated_throughput(self, state: WorkerState) -> float:
         if state.throughput is not None:
-            return state.throughput
+            # A measurement — even 0.0 from a stalled unit counts; floor it
+            # instead of falling through to the optimistic bootstrap prior.
+            return max(state.throughput, THROUGHPUT_FLOOR)
         # Bootstrap: unobserved units get a prior relative to observed ones.
-        observed = [w.throughput for w in self._workers.values() if w.throughput]
-        base = min(observed) if observed else 1.0
+        observed = [w.throughput for w in self._workers.values()
+                    if w.throughput is not None]
+        base = max(min(observed), THROUGHPUT_FLOOR) if observed else 1.0
         if state.kind == WorkerKind.ACC:
             return base * self.initial_acc_speedup
         return base
@@ -366,11 +443,17 @@ class OracleStaticScheduler:
     """Static split proportional to *known* throughputs (upper bound for
     regular workloads; still loses to MultiDynamic on irregular ones)."""
 
-    def __init__(self, num_items: int, throughputs: Dict[str, float]) -> None:
+    def __init__(
+        self,
+        num_items: int,
+        throughputs: Dict[str, float],
+        overheads: Optional[Dict[str, float]] = None,
+    ) -> None:
         self.num_items = num_items
         self._assignments: Dict[str, Optional[Chunk]] = {}
         start = 0
-        for w, size in proportional_split(num_items, throughputs).items():
+        split = latency_aware_split(num_items, throughputs, overheads)
+        for w, size in split.items():
             self._assignments[w] = Chunk(start, start + size, w) if size > 0 else None
             start += size
 

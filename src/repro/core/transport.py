@@ -67,6 +67,7 @@ from __future__ import annotations
 
 import argparse
 import hashlib
+import math
 import os
 import pickle
 import queue
@@ -79,7 +80,7 @@ import sys
 import threading
 import time
 from collections import OrderedDict, deque
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 from .backends import (
     BackendUnit,
@@ -100,6 +101,7 @@ __all__ = [
     "RemoteWorker",
     "WorkerServer",
     "RemoteUnit",
+    "AUTO_BATCH_MAX",
     "SleepWork",
     "WorkerHandle",
     "spawn_worker",
@@ -765,6 +767,14 @@ class WorkerServer:
 # ---------------------------------------------------------------------------
 # the near side: the proxy unit
 # ---------------------------------------------------------------------------
+# Adaptive frame-batching bounds: "auto" never shrinks the wire shape
+# below the legacy one-chunk frame and never coalesces more chunks than
+# this into a single frame (a lost frame costs one retransmit of
+# everything on it, so unbounded batches would magnify fault recovery).
+AUTO_BATCH_MAX = 32
+_AUTO_BATCH_ALPHA = 0.4
+
+
 class RemoteUnit(BackendUnit):
     """A :class:`BackendUnit` whose execution happens behind a transport.
 
@@ -793,7 +803,15 @@ class RemoteUnit(BackendUnit):
       engine pipelines that many chunks; scheduler-visible granularity
       and per-chunk completion accounting are unchanged, and
       ``batch_frames=1`` keeps the legacy one-``submit``-per-chunk wire
-      shape exactly.
+      shape exactly.  ``batch_frames="auto"`` sizes the width adaptively
+      from what the unit learns on the wire: an EWMA of raw frame
+      transit time (send → worker accept, the cost one frame pays
+      regardless of how many chunks ride it) against an EWMA of
+      per-chunk service time, so a high-latency link grows the batch
+      until the wire cost is amortized below one chunk's work.  The
+      width starts at 1 (legacy shape), is re-evaluated at every flush
+      boundary, and is clamped to ``[1, AUTO_BATCH_MAX]``; the converged
+      value is surfaced per unit as ``RunReport.batch_frames``.
 
     ``submit`` is non-blocking: it buffers the chunk (sending
     immediately when a batch fills or :meth:`flush` is called); the
@@ -834,7 +852,7 @@ class RemoteUnit(BackendUnit):
         retry_interval: float = 0.1,
         max_retries: int = 100,
         connect_timeout: float = 10.0,
-        batch_frames: int = 1,
+        batch_frames: Union[int, str] = 1,
         fn_cache: bool = True,
     ) -> None:
         super().__init__(name)
@@ -845,16 +863,29 @@ class RemoteUnit(BackendUnit):
                 f"remote_backend must be one of {_HOSTABLE}, "
                 f"got {remote_backend!r} (no proxy chains)"
             )
-        if int(batch_frames) < 1:
-            raise ValueError(f"batch_frames must be >= 1, got {batch_frames}")
+        self.auto_batch = batch_frames == "auto"
+        if self.auto_batch:
+            self._batch = 1  # legacy wire shape until the link is measured
+        else:
+            if isinstance(batch_frames, str):
+                raise ValueError(
+                    f"batch_frames must be an int >= 1 or 'auto', "
+                    f"got {batch_frames!r}"
+                )
+            if int(batch_frames) < 1:
+                raise ValueError(f"batch_frames must be >= 1, got {batch_frames}")
+            self._batch = int(batch_frames)
         self.address = address
         self.remote_backend = remote_backend
         self.retry_interval = float(retry_interval)
         self.max_retries = int(max_retries)
         self.connect_timeout = float(connect_timeout)
-        self.batch_frames = int(batch_frames)
-        self.capacity = self.batch_frames  # engine pipelines this many
         self.fn_cache = bool(fn_cache)
+        # Adaptive-width state: raw frame transit vs. per-chunk service
+        # EWMAs (seconds); kept across restarts — the link does not
+        # forget its character when a session reconnects.
+        self._ewma_transit: Optional[float] = None
+        self._ewma_service: Optional[float] = None
         self._transport = transport
         self.lost = False
         self.wire_latencies: List[float] = []
@@ -870,6 +901,41 @@ class RemoteUnit(BackendUnit):
         self._plock = threading.Lock()
         self._stop = threading.Event()
         self._recv_thread: Optional[threading.Thread] = None
+
+    # -- adaptive frame batching --------------------------------------------
+    @property
+    def batch_frames(self) -> int:
+        """Current frame-coalescing width (fixed value, or the adaptive
+        one when constructed with ``batch_frames="auto"``)."""
+        return self._batch
+
+    @property
+    def capacity(self) -> int:
+        # the engine pipelines exactly one frame's worth of chunks
+        return self._batch
+
+    @property
+    def effective_batch_frames(self) -> int:
+        """Alias surfaced into ``RunReport.batch_frames`` by the engine."""
+        return self._batch
+
+    def _auto_resize(self) -> None:
+        """Re-size the adaptive width from the learned link character.
+
+        Target: enough chunks per frame that the raw frame transit time
+        (paid once per frame, whatever rides on it) is amortized below
+        one chunk's service time — ``ceil(transit / service)``, clamped
+        to ``[1, AUTO_BATCH_MAX]``.  Called at flush boundaries so the
+        width only moves between frames, never inside one.
+        """
+        if not self.auto_batch:
+            return
+        with self._plock:
+            transit, service = self._ewma_transit, self._ewma_service
+        if transit is None or service is None:
+            return
+        target = math.ceil(transit / max(service, 1e-9))
+        self._batch = max(1, min(int(target), AUTO_BATCH_MAX))
 
     # -- lifecycle ----------------------------------------------------------
     def start(self, bus: CompletionBus) -> None:
@@ -988,8 +1054,14 @@ class RemoteUnit(BackendUnit):
             self.flush()
 
     def flush(self) -> None:
-        """Send every buffered (not-yet-transmitted) chunk now."""
+        """Send every buffered (not-yet-transmitted) chunk now.
+
+        A flush is also the adaptive-width re-evaluation boundary: the
+        buffered frame goes out at the width it was filled for, then the
+        width adjusts for the next fill.
+        """
         self._transmit(resend=False)
+        self._auto_resize()
 
     def _transmit(self, *, resend: bool) -> None:
         """Frame and send pending work: the unsent buffer (``resend=False``)
@@ -1147,6 +1219,19 @@ class RemoteUnit(BackendUnit):
                 + max(t_start - t_accept, 0.0))
         self.wire_latencies.append(wire)
         self.local_queue_latencies.append(max(t_sent - p["t_submit"], 0.0))
+        if self.auto_batch:
+            # Raw (undivided) frame transit vs. per-chunk service time:
+            # the attributed per-chunk wire number above shrinks as the
+            # batch grows, which would feed back into ever-smaller
+            # targets; sizing needs the cost one frame actually pays.
+            a = _AUTO_BATCH_ALPHA
+            transit = max(t_accept - t_sent, 0.0)
+            service = max(float(item.get("elapsed", 0.0)), 0.0)
+            with self._plock:
+                self._ewma_transit = (transit if self._ewma_transit is None
+                                      else a * transit + (1 - a) * self._ewma_transit)
+                self._ewma_service = (service if self._ewma_service is None
+                                      else a * service + (1 - a) * self._ewma_service)
         self._post(CompletionRecord(
             unit=self.name, chunk=p["chunk"],
             elapsed=float(item.get("elapsed", 0.0)),

@@ -41,7 +41,7 @@ from repro.core import (
 )
 from repro.core.costmodel import STORE_SCHEMA, base_unit_name
 from repro.core.runtime import POLICIES
-from repro.core.scheduler import proportional_split
+from repro.core.scheduler import latency_aware_split, proportional_split
 
 
 def assert_exact_tiling(spans, n_items):
@@ -152,6 +152,123 @@ class TestProportionalSplit:
             proportional_split(10, {"a": 0.0})
 
 
+# ---------------------------------------------------------------------------
+# completion-time prediction (ISSUE 9: dispatch+wire folded into the entry)
+# ---------------------------------------------------------------------------
+class TestCostEntryPredict:
+    def test_overhead_is_max_not_sum(self):
+        # dispatch_latency already *contains* the wire component for
+        # remote units; adding them would double-count the medium
+        e = CostEntry(unit="u", kernel="k",
+                      dispatch_latency=0.004, wire_latency=0.003)
+        assert e.overhead() == pytest.approx(0.004)
+
+    def test_overhead_cold_entry_is_zero(self):
+        assert CostEntry(unit="u", kernel="k").overhead() == 0.0
+        assert CostEntry(unit="u", kernel="k",
+                         wire_latency=0.002).overhead() == pytest.approx(0.002)
+
+    def test_predict_adds_per_chunk_overhead(self):
+        e = CostEntry(unit="u", kernel="k", throughput=100.0,
+                      dispatch_latency=0.01)
+        assert e.predict(200) == pytest.approx(2.01)
+        assert e.predict(200, chunks=5) == pytest.approx(2.05)
+        assert e.predict(200, chunks=0) == pytest.approx(2.0)
+
+    def test_predict_cold_returns_none(self):
+        assert CostEntry(unit="u", kernel="k").predict(100) is None
+
+    def test_overheads_default_to_zero_for_unknown_units(self):
+        m = CostModel()
+        m.observe_latency("a", "k", dispatch=0.02)
+        out = m.overheads(["a", "b"], "k")
+        assert out["a"] == pytest.approx(0.02)
+        assert out["b"] == 0.0
+
+    def test_fleet_throughput_counts_measured_zero(self, tmp_path):
+        # a stalled unit's measured 0.0 is an observation; the old
+        # truthiness filter silently dropped it from the fleet mean
+        store = tmp_path / "cost.json"
+        store.write_text(json.dumps({
+            "schema": STORE_SCHEMA,
+            "entries": [
+                {"unit": "u0", "kernel": "k", "throughput": 0.0},
+                {"unit": "u1", "kernel": "k", "throughput": 100.0},
+            ],
+        }))
+        m = CostModel(str(store))
+        assert m.fleet_throughput("k") == pytest.approx(50.0)
+
+    def test_fleet_throughput_all_zero_is_floored(self, tmp_path):
+        store = tmp_path / "cost.json"
+        store.write_text(json.dumps({
+            "schema": STORE_SCHEMA,
+            "entries": [{"unit": "u0", "kernel": "k", "throughput": 0.0}],
+        }))
+        m = CostModel(str(store))
+        fleet = m.fleet_throughput("k")
+        # an observation, not None — and floored so callers can divide
+        assert fleet is not None and fleet > 0.0
+
+
+# ---------------------------------------------------------------------------
+# learned policy consults the latency-aware split (ISSUE 9 tentpole)
+# ---------------------------------------------------------------------------
+class TestLatencyAwarePlan:
+    def test_learned_plan_penalizes_high_latency_unit(self):
+        model = CostModel()
+        rt = make_sim_runtime({"a": 1.0, "b": 1.0}, model=model)
+        for u in ("a", "b"):
+            model.observe(u, "default", items=1000, elapsed=1.0)
+        model.observe_latency("b", "default", dispatch=0.05)
+        # equal speeds: throughput-only would split 150/150; the learned
+        # 50 ms dispatch on "b" is 50 items' worth at 1000 items/s, and
+        # the water-fill level lands at (300 + 50)/2000 = 0.175 s
+        plan = rt.plan(300, policy="learned")
+        assert plan["a"] == (0, 175)
+        assert plan["b"] == (175, 300)
+
+    def test_plan_matches_latency_aware_split(self):
+        model = CostModel()
+        rt = make_sim_runtime({"a": 1.0, "b": 1.0, "c": 1.0}, model=model)
+        speeds = {"a": 400.0, "b": 100.0, "c": 250.0}
+        for u, tp in speeds.items():
+            model.observe(u, "default", items=int(tp), elapsed=1.0)
+        model.observe_latency("c", "default", dispatch=0.03, wire=0.01)
+        plan = rt.plan(900, policy="learned")
+        sizes = latency_aware_split(
+            900, speeds, model.overheads(list(speeds), "default"))
+        assert {u: b - a for u, (a, b) in plan.items()} == sizes
+
+    def test_learned_run_with_latency_still_tiles(self):
+        model = CostModel()
+        rt = make_sim_runtime({"a": 100.0, "b": 100.0}, model=model)
+        rt.parallel_for(num_items=500, policy="learned", acc_chunk=16)
+        model.observe_latency("b", "default", dispatch=0.5)
+        rep = rt.parallel_for(num_items=500, policy="learned", acc_chunk=16)
+        assert_exact_tiling(rep.coverage, 500)
+        assert rep.per_worker_items["b"] < rep.per_worker_items["a"]
+
+
+# ---------------------------------------------------------------------------
+# store loading: only real load errors cold-start
+# ---------------------------------------------------------------------------
+def test_load_keyboard_interrupt_propagates(tmp_path, monkeypatch):
+    # regression: `except BaseException` used to swallow a Ctrl-C during
+    # store load into a silent cold start
+    store = tmp_path / "cost.json"
+    m = CostModel()
+    m.observe("u0", "k", items=10, elapsed=1.0)
+    m.save(str(store))
+
+    def interrupted(*a, **kw):
+        raise KeyboardInterrupt
+
+    monkeypatch.setattr(json, "load", interrupted)
+    with pytest.raises(KeyboardInterrupt):
+        CostModel(str(store))
+
+
 def test_learned_is_last_policy():
     # property batteries elsewhere draw from POLICIES[pick % 3]; the three
     # cost-free policies must keep their indices
@@ -254,6 +371,66 @@ class TestLearnedConvergenceBattery:
                                kernel="hotspot")
         assert warm.chunks <= 2
         assert cold.chunks > 2
+
+
+# ---------------------------------------------------------------------------
+# wall-clock noise tolerance (ISSUE 9 tentpole): the SimulatedClock battery
+# above proves convergence on a noiseless clock; this one re-runs the
+# learned-vs-oracle comparison over real ThreadUnits whose work functions
+# jitter +/-15% per chunk, and gates the gap on a tolerance *band* (max and
+# mean across seeds) instead of the simulated battery's tight 10%.
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+class TestWallClockNoiseTolerance:
+    N_SEEDS = 20
+    N_ITEMS = 360
+    # calibrated on an idle machine: observed max ~1.20, mean ~1.02 over
+    # 20 seeds; the band leaves headroom for loaded CI runners
+    TOL_MAX = 1.35
+    TOL_MEAN = 1.15
+
+    def _run_one(self, seed):
+        rng = random.Random(1000 + seed)
+
+        def jittered(per_item):
+            def fn(chunk):
+                time.sleep(chunk.size * per_item * rng.uniform(0.85, 1.15))
+            return fn
+
+        model = CostModel()
+        rt = HeteroRuntime(cost_model=model)
+        # registered speeds are the jitter-free ground truth the oracle
+        # splits on; the learned policy has to recover them from noisy
+        # wall-clock completions
+        rt.register_unit("acc0", WorkerKind.ACC, speed=2500.0,
+                         work_fn=jittered(4e-4))
+        rt.register_unit("acc1", WorkerKind.ACC, speed=2500.0,
+                         work_fn=jittered(4e-4))
+        rt.register_unit("cc0", WorkerKind.CC, speed=625.0,
+                         work_fn=jittered(1.6e-3))
+        rt.register_unit("cc1", WorkerKind.CC, speed=625.0,
+                         work_fn=jittered(1.6e-3))
+        kw = dict(acc_chunk=24, engine="interrupt")
+        rt.parallel_for(num_items=self.N_ITEMS, policy="learned", **kw)
+        learned = rt.parallel_for(num_items=self.N_ITEMS,
+                                  policy="learned", **kw)
+        oracle = rt.parallel_for(num_items=self.N_ITEMS,
+                                 policy="oracle", **kw)
+        for rep in (learned, oracle):
+            assert rep.items == self.N_ITEMS
+            assert_exact_tiling(rep.coverage, self.N_ITEMS)
+        return learned.makespan / oracle.makespan
+
+    def test_learned_tracks_oracle_under_jitter(self):
+        ratios = [self._run_one(seed) for seed in range(self.N_SEEDS)]
+        worst = max(ratios)
+        mean = sum(ratios) / len(ratios)
+        assert worst <= self.TOL_MAX, (
+            f"worst learned/oracle ratio {worst:.3f} > {self.TOL_MAX} "
+            f"(ratios: {[round(r, 3) for r in ratios]})")
+        assert mean <= self.TOL_MEAN, (
+            f"mean learned/oracle ratio {mean:.3f} > {self.TOL_MEAN} "
+            f"(ratios: {[round(r, 3) for r in ratios]})")
 
 
 # ---------------------------------------------------------------------------

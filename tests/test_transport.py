@@ -57,6 +57,7 @@ from repro.core.backends import CompletionBus, make_backend
 from repro.core.runtime import POLICIES
 from repro.core.scheduler import Chunk
 from repro.core.transport import (
+    AUTO_BATCH_MAX,
     FrameDecoder,
     SleepWork,
     encode_frame,
@@ -591,14 +592,16 @@ class TestRemoteSpec:
 # worker loss: the medium dies, the run does not
 # ---------------------------------------------------------------------------
 class DropDoneTransport(FlakyTransport):
-    """Drops every ``done``/``busy`` frame: the worker→client channel is
-    dead while submits still flow — retransmit exhaustion, deterministic."""
+    """Drops every ``done``/``done_batch``/``busy`` frame: the
+    worker→client channel is dead while submits still flow — retransmit
+    exhaustion, deterministic."""
 
     def __init__(self, inner):
         super().__init__(inner, seed=0)
 
     def send(self, frame):
-        if isinstance(frame, dict) and frame.get("kind") in ("done", "busy"):
+        if isinstance(frame, dict) and frame.get("kind") in (
+                "done", "done_batch", "busy"):
             return
         self.inner.send(frame)
 
@@ -1109,6 +1112,119 @@ class TestRemoteSpecKnobs:
     def test_batch_frames_must_be_positive(self):
         with pytest.raises(ValueError, match="batch_frames"):
             make_backend("remote:127.0.0.1:9?batch_frames=0", "r0")
+
+    def test_batch_frames_auto_spec(self):
+        unit = make_backend("remote:127.0.0.1:9?batch_frames=auto", "r0")
+        assert isinstance(unit, RemoteUnit)
+        assert unit.auto_batch is True
+        # adaptation starts narrow and only widens from latency evidence
+        assert unit.batch_frames == 1 and unit.capacity == 1
+
+    def test_auto_is_only_for_batch_frames(self):
+        with pytest.raises(ValueError):
+            make_backend("remote:127.0.0.1:9?fn_cache=auto", "r0")
+
+
+# ---------------------------------------------------------------------------
+# adaptive frame batching (ISSUE 9 tentpole): batch_frames="auto"
+# ---------------------------------------------------------------------------
+class TestAdaptiveFrameBatching:
+    def _drive(self, unit, n_chunks, work_fn):
+        """Pump chunks through the unit, windowed at its (live) capacity."""
+        bus = CompletionBus()
+        unit.start(bus)
+        try:
+            issued = done = 0
+            while done < n_chunks:
+                while issued < n_chunks and issued - done < unit.capacity:
+                    unit.submit(Chunk(issued, issued + 1, unit.name), work_fn)
+                    issued += 1
+                unit.flush()
+                assert bus.wait(timeout=30.0), (
+                    f"completions stalled at {done}/{n_chunks}")
+                for rec in bus.drain():
+                    assert rec.error is None
+                    done += 1
+        finally:
+            unit.close()
+
+    def test_constructor_rejects_bad_string(self):
+        client_end, _ = LoopbackTransport.pair()
+        with pytest.raises(ValueError, match="batch_frames"):
+            RemoteUnit("u0", transport=client_end, batch_frames="lots")
+
+    def test_auto_widens_on_delayed_link(self):
+        # every frame in both directions pays uniform(0, 8 ms): frame
+        # transit dwarfs the near-zero service time, so the learned width
+        # must open up from 1 — and exact-once execution must survive the
+        # batching transitions
+        client_end, worker_end = LoopbackTransport.pair()
+        client_side = FlakyTransport(client_end, seed=11,
+                                     delay=1.0, max_delay=0.008)
+        worker_side = FlakyTransport(worker_end, seed=12,
+                                     delay=1.0, max_delay=0.008)
+        worker = RemoteWorker(worker_side, poll_interval=0.02)
+        threading.Thread(target=worker.serve, daemon=True).start()
+        unit = RemoteUnit("u0", transport=client_side, retry_interval=0.5,
+                          max_retries=200, batch_frames="auto")
+        rec = Recorder()
+        self._drive(unit, 160, rec)
+        rec.assert_exactly_once(160)
+        assert unit.auto_batch
+        assert 1 < unit.effective_batch_frames <= AUTO_BATCH_MAX
+        # capacity tracks the live width so drivers can keep the pipe full
+        assert unit.capacity == unit.effective_batch_frames
+
+    def test_auto_stays_narrow_on_clean_link(self):
+        # loopback transit is microseconds while each chunk takes ~2 ms of
+        # service: batching would add latency for nothing, width stays 1
+        unit = loopback_unit("u0", batch_frames="auto")
+        rec = Recorder(per_item_sleep=2e-3)
+        self._drive(unit, 30, rec)
+        rec.assert_exactly_once(30)
+        assert unit.effective_batch_frames == 1
+
+    def test_runreport_carries_effective_width(self):
+        rec = Recorder(per_item_sleep=2e-5)
+        rt = HeteroRuntime()
+        rt.register_unit("r0", WorkerKind.CC, work_fn=rec,
+                         backend=loopback_unit("r0", batch_frames="auto"))
+        rt.register_unit("cc0", WorkerKind.CC, work_fn=rec)
+        rep = rt.parallel_for(num_items=200, policy="multidynamic",
+                              engine="interrupt", acc_chunk=16)
+        assert_exact_tiling(rep.coverage, 200)
+        rec.assert_exactly_once(200)
+        # only transport units report a frame width; local units have none
+        assert rep.batch_frames is not None
+        assert set(rep.batch_frames) == {"r0"}
+        assert 1 <= rep.batch_frames["r0"] <= AUTO_BATCH_MAX
+
+    def test_lost_pipelined_unit_requeues_all_outstanding(self):
+        # capacity 3 (batch_frames=3): the unit dies holding three chunks.
+        # Regression: abort used to surrender only the oldest in-flight
+        # chunk, so two spans vanished and the run hung or under-covered;
+        # now every dropped span requeues and the survivor finishes the
+        # space exact-once.
+        client_end, worker_end = LoopbackTransport.pair()
+        worker = RemoteWorker(DropDoneTransport(worker_end),
+                              poll_interval=0.02)
+        threading.Thread(target=worker.serve, daemon=True).start()
+        rec = Recorder(per_item_sleep=1e-5)
+        rt = HeteroRuntime()
+        rt.register_unit("r0", WorkerKind.CC, work_fn=rec,
+                         backend=RemoteUnit("r0", transport=client_end,
+                                            retry_interval=0.01,
+                                            max_retries=5, batch_frames=3))
+        rt.register_unit("cc0", WorkerKind.CC, work_fn=rec)
+        rep = rt.parallel_for(num_items=120, policy="multidynamic",
+                              engine="interrupt", acc_chunk=8)
+        assert rep.items == 120
+        assert_exact_tiling(rep.coverage, 120)
+        lost = [e for e in rep.events if e["action"] == "lost"]
+        assert len(lost) == 1 and lost[0]["unit"] == "r0"
+        # every index ran at least once; requeued spans may legitimately
+        # repeat (the worker executed them but the done frames were lost)
+        assert set(rec.counts) == set(range(120))
 
 
 # ---------------------------------------------------------------------------

@@ -32,12 +32,17 @@ applies to fresh runs and the committed artifact alike):
   acceptance number: learned splits within 10% of oracle after one
   warmup run.
 
-``bench_dispatch/v1`` checks (``benchmarks/bench_dispatch.py``): full
+``bench_dispatch/v2`` checks (``benchmarks/bench_dispatch.py``): full
 transport x mode coverage with positive metrics, loopback batched
 ``dispatch_us`` <= baseline, a ``speedups`` block consistent with the
-configs, and — with ``--min-speedup S`` — socket batched/baseline
-``chunks_per_sec`` >= S.  ``--schema NAME`` pins the expected schema so
-CI cannot silently validate the wrong artifact kind.
+configs, and a ``latency_aware`` block whose ratios are consistent with
+their entries.  Performance gates: ``--min-speedup S`` (socket
+batched/baseline ``chunks_per_sec`` >= S), ``--min-auto-ratio R``
+(``batch_frames="auto"`` vs fixed on the flaky-delay transport >= R)
+and ``--min-split-ratio R`` (throughput-only / latency-aware learned
+makespan >= R — the latency terms must not make the split worse).
+``--schema NAME`` pins the expected schema so CI cannot silently
+validate the wrong artifact kind.
 
 Exit code 0 on success, 1 with a diagnostic on any violation.
 """
@@ -58,24 +63,34 @@ from repro.serving.loadgen import METRIC_KEYS  # noqa: E402
 
 SCHEMA = "bench_serving/v1"
 COSTMODEL_SCHEMA = "bench_costmodel/v1"
-DISPATCH_SCHEMA = "bench_dispatch/v1"
+DISPATCH_SCHEMA = "bench_dispatch/v2"
 
 _DISPATCH_TRANSPORTS = ("loopback", "socket", "flaky")
 _DISPATCH_MODES = ("baseline", "cached", "batched")
 
 
-def check_dispatch(doc: dict, *, min_speedup: float = 0.0) -> list:
-    """Return violation strings for a ``bench_dispatch/v1`` artifact.
+def check_dispatch(doc: dict, *, min_speedup: float = 0.0,
+                   min_auto_ratio: float = 0.0,
+                   min_split_ratio: float = 0.0) -> list:
+    """Return violation strings for a ``bench_dispatch/v2`` artifact.
 
     Structural checks hold for fresh ``--quick`` smoke runs and the
-    committed artifact alike; two performance gates ride along:
+    committed artifact alike; the performance gates ride along:
 
     * loopback ``batched`` must not cost more per dispatched chunk than
       ``baseline`` (``dispatch_us`` ordering — the pinned local config
       where no network noise can excuse a regression);
     * with ``--min-speedup S``: socket batched/baseline
       ``chunks_per_sec`` >= S (CI applies 2.0 to the committed
-      artifact only — the ISSUE's acceptance line).
+      artifact only — ISSUE 8's acceptance line);
+    * with ``--min-auto-ratio R``: ``batch_frames="auto"`` must reach at
+      least R times the fixed-width chunks/s on the flaky-delay
+      transport (CI applies 1.0 to the committed artifact — ISSUE 9's
+      adaptive-batching acceptance line);
+    * with ``--min-split-ratio R``: the throughput-only pre-split's
+      makespan over the latency-aware one must be >= R (CI applies 1.0
+      to the committed artifact — learned latency terms must beat the
+      throughput-only learned split on the mixed local+remote set).
     """
     errs = []
     if doc.get("schema") != DISPATCH_SCHEMA:
@@ -144,6 +159,58 @@ def check_dispatch(doc: dict, *, min_speedup: float = 0.0) -> list:
                 f"socket batched/baseline speedup {sock:.2f}x below the "
                 f"required {min_speedup:.2f}x"
             )
+
+    la = doc.get("latency_aware")
+    if not isinstance(la, dict):
+        return errs + ["missing 'latency_aware' block"]
+    for sub in ("fixed", "auto"):
+        entry = la.get(sub)
+        if not isinstance(entry, dict):
+            errs.append(f"latency_aware missing {sub!r} entry")
+            continue
+        for field in ("chunks_per_sec", "wall_s", "final_batch_frames"):
+            v = entry.get(field)
+            if not isinstance(v, (int, float)) or not v > 0:
+                errs.append(f"latency_aware[{sub!r}]: {field} must be "
+                            f"positive, got {v!r}")
+    if isinstance(la.get("fixed"), dict) and isinstance(la.get("auto"), dict):
+        want = (la["auto"].get("chunks_per_sec", 0.0)
+                / max(la["fixed"].get("chunks_per_sec", 0.0), 1e-12))
+        got = la.get("auto_ratio")
+        if not isinstance(got, (int, float)) or abs(got - want) > 1e-6 * want:
+            errs.append(f"latency_aware auto_ratio {got!r} inconsistent "
+                        f"with entries ({want:.4f})")
+        elif min_auto_ratio > 0 and not got >= min_auto_ratio:
+            errs.append(
+                f"flaky-delay auto/fixed ratio {got:.2f}x below the "
+                f"required {min_auto_ratio:.2f}x — adaptive batching lost "
+                "to the hand-tuned width"
+            )
+    split = la.get("split")
+    if not isinstance(split, dict):
+        errs.append("latency_aware missing 'split' study")
+    else:
+        t_only = split.get("throughput_only_makespan_s")
+        lat = split.get("latency_aware_makespan_s")
+        ratio = split.get("makespan_ratio")
+        for field, v in (("throughput_only_makespan_s", t_only),
+                         ("latency_aware_makespan_s", lat)):
+            if not isinstance(v, (int, float)) or not v > 0:
+                errs.append(f"latency_aware split: {field} must be "
+                            f"positive, got {v!r}")
+        if (isinstance(t_only, (int, float)) and isinstance(lat, (int, float))
+                and lat > 0):
+            want = t_only / lat
+            if (not isinstance(ratio, (int, float))
+                    or abs(ratio - want) > 1e-6 * want):
+                errs.append(f"latency_aware split makespan_ratio {ratio!r} "
+                            f"inconsistent with makespans ({want:.4f})")
+            elif min_split_ratio > 0 and not ratio >= min_split_ratio:
+                errs.append(
+                    f"latency-aware learned split only reached {ratio:.2f}x "
+                    f"the throughput-only makespan (required "
+                    f">= {min_split_ratio:.2f}x)"
+                )
     return errs
 
 
@@ -271,6 +338,14 @@ def main(argv: list) -> int:
     ap.add_argument("--min-speedup", type=float, default=0.0,
                     help="bench_dispatch: required socket batched/baseline "
                          "chunks_per_sec ratio (0 = structural checks only)")
+    ap.add_argument("--min-auto-ratio", type=float, default=0.0,
+                    help="bench_dispatch: required batch_frames=auto vs "
+                         "fixed chunks_per_sec ratio on the flaky-delay "
+                         "transport (0 = structural checks only)")
+    ap.add_argument("--min-split-ratio", type=float, default=0.0,
+                    help="bench_dispatch: required throughput-only / "
+                         "latency-aware learned-split makespan ratio "
+                         "(0 = structural checks only)")
     args = ap.parse_args(argv)
     with open(args.path) as fh:
         doc = json.load(fh)
@@ -282,7 +357,9 @@ def main(argv: list) -> int:
     if schema == COSTMODEL_SCHEMA:
         errs = check_costmodel(doc, max_gap=args.max_gap)
     elif schema == DISPATCH_SCHEMA:
-        errs = check_dispatch(doc, min_speedup=args.min_speedup)
+        errs = check_dispatch(doc, min_speedup=args.min_speedup,
+                              min_auto_ratio=args.min_auto_ratio,
+                              min_split_ratio=args.min_split_ratio)
     else:
         errs = check(doc, require_continuous_wins=args.require_continuous_wins)
     for e in errs:
