@@ -15,6 +15,9 @@
   versioned JSON store; feeds ``policy="learned"`` splits.
 * :mod:`repro.core.straggler` — straggler detection and mitigation.
 * :mod:`repro.core.elastic` — node-failure handling / mesh rescale plans.
+* :mod:`repro.core.fleet` — fleet membership: heartbeat liveness ledger,
+  queue-driven autoscaling, seeded churn simulation, and the wall-clock
+  manager that owns ``spawn_worker`` subprocesses.
 * :mod:`repro.core.moe_dispatch` — capacity-chunk MoE dispatch with dense
   fallback (the LM-native instantiation of MultiDynamic).
 * :mod:`repro.core.parallel_for` — hybrid MXU/VPU executor for irregular
@@ -38,6 +41,7 @@ from .backends import (
     JaxDeviceUnit,
     ProcessPoolUnit,
     ThreadUnit,
+    WorkerDead,
     WorkerLost,
 )
 from .transport import (
@@ -59,6 +63,15 @@ from .hetero import HeteroPartition, HeterogeneousPartitioner, ThroughputTracker
 from .straggler import MitigationPlan, StragglerDetector, StragglerMitigator, StragglerReport
 from .elastic import DeviceHealth, ElasticEvent, ElasticMeshManager, ElasticSchedule, RescalePlan
 from .parallel_for import HybridExecutor, SplitDecision
+from .fleet import (
+    Autoscaler,
+    FailureTrace,
+    FleetManager,
+    FleetSimResult,
+    HeartbeatBook,
+    TraceEvent,
+    simulate_fleet,
+)
 
 __all__ = [
     "HeteroRuntime",
@@ -90,6 +103,7 @@ __all__ = [
     "ProcessPoolUnit",
     "JaxDeviceUnit",
     "WorkerLost",
+    "WorkerDead",
     "Transport",
     "TransportError",
     "TransportClosed",
@@ -115,4 +129,11 @@ __all__ = [
     "RescalePlan",
     "HybridExecutor",
     "SplitDecision",
+    "HeartbeatBook",
+    "Autoscaler",
+    "FailureTrace",
+    "TraceEvent",
+    "FleetSimResult",
+    "FleetManager",
+    "simulate_fleet",
 ]

@@ -70,6 +70,7 @@ __all__ = [
     "ProcessPoolUnit",
     "JaxDeviceUnit",
     "WorkerLost",
+    "WorkerDead",
     "BackendEngine",
     "BACKENDS",
     "make_backend",
@@ -83,11 +84,15 @@ BACKENDS = ("inline", "thread", "process", "jax", "remote")
 # list it (tests pin this — an unknown spec must teach the valid ones).
 VALID_BACKEND_SPECS = (
     "'inline'", "'thread'/'threads'", "'process'/'processes'", "'jax'",
-    "'remote:<host:port>' (optional '?batch_frames=N&fn_cache=0|1' suffix)",
+    "'remote:<host:port>' (optional '?batch_frames=N&fn_cache=0|1"
+    "&heartbeat=SECS&patience=N' suffix)",
 )
 
-# Dispatch fast-path knobs accepted in a remote spec's query string.
-REMOTE_SPEC_KNOBS = ("batch_frames", "fn_cache")
+# Dispatch fast-path and liveness knobs accepted in a remote spec's
+# query string.  ``heartbeat`` (float seconds) asks the worker for
+# periodic liveness frames; ``patience`` is how many missed intervals
+# convict the worker as dead.
+REMOTE_SPEC_KNOBS = ("batch_frames", "fn_cache", "heartbeat", "patience")
 
 
 class WorkerLost(ConnectionError):
@@ -100,6 +105,20 @@ class WorkerLost(ConnectionError):
     event: :class:`BackendEngine` removes the unit and requeues its
     in-flight chunk to the survivors exactly once, the same path an
     elastic leave takes.
+    """
+
+
+class WorkerDead(WorkerLost):
+    """Missed-heartbeat conviction: the worker went *silent*, it did not
+    visibly drop the connection.
+
+    Posted by a heartbeat-enabled :class:`~repro.core.transport.RemoteUnit`
+    when the worker has sent nothing (heartbeats included) for
+    ``patience`` intervals — the membership ledger's verdict, as opposed
+    to the definitive EOF behind a plain :class:`WorkerLost`.  The engine
+    handles both identically (remove + exact-once requeue) but records
+    ``action="dead"`` instead of ``action="lost"`` so a report
+    distinguishes silence from loss mid-chunk.
     """
 
 
@@ -544,6 +563,21 @@ def make_backend(spec: Union[str, BackendUnit, None], name: str) -> BackendUnit:
                 if key == "batch_frames" and value == "auto":
                     opts[key] = "auto"
                     continue
+                if key == "heartbeat":
+                    # the one float-valued knob: an interval in seconds
+                    try:
+                        opts[key] = float(value)
+                    except ValueError:
+                        raise ValueError(
+                            f"remote backend knob heartbeat={value!r} in "
+                            f"{spec!r} must be a number of seconds"
+                        ) from None
+                    if not opts[key] > 0:
+                        raise ValueError(
+                            f"remote backend knob heartbeat={value!r} in "
+                            f"{spec!r} must be positive"
+                        )
+                    continue
                 try:
                     opts[key] = int(value)
                 except ValueError:
@@ -562,6 +596,8 @@ def make_backend(spec: Union[str, BackendUnit, None], name: str) -> BackendUnit:
             name, address=address,
             batch_frames=opts.get("batch_frames", 1),
             fn_cache=bool(opts.get("fn_cache", 1)),
+            heartbeat=opts.get("heartbeat"),
+            patience=int(opts.get("patience", 3)),
         )
     aliases = {
         "inline": InlineUnit,
@@ -761,7 +797,11 @@ class BackendEngine:
             # failure posted per pending chunk): membership already handled
             return
         self.events.append({
-            "t": self._now(), "action": "lost", "unit": name,
+            # "dead" = missed-heartbeat conviction (silence); "lost" =
+            # definitive EOF / retransmit exhaustion (loss mid-chunk)
+            "t": self._now(),
+            "action": "dead" if isinstance(rec.error, WorkerDead) else "lost",
+            "unit": name,
             "requeued": (rec.chunk.start, rec.chunk.stop)
             if rec.chunk is not None else None,
         })

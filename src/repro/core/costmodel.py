@@ -37,6 +37,7 @@ its own; a single lock makes observation safe from engine callbacks.
 from __future__ import annotations
 
 import json
+import math
 import os
 import re
 import threading
@@ -274,6 +275,26 @@ class CostModel:
         if not vals:
             return None
         return max(sum(vals) / len(vals), 1e-9)
+
+    def predict_drain(self, kernel: str, items: int,
+                      n_units: int) -> Optional[float]:
+        """Predicted seconds to drain ``items`` across ``n_units`` workers.
+
+        Uses the mean learned per-unit throughput for ``kernel``
+        (:meth:`fleet_throughput`), so the estimate is for a fleet of
+        *typical* units — the question an autoscaler asks ("at the
+        current size, how long until the queue empties?"), not a
+        per-unit placement question.  ``None`` until the model has at
+        least one observation for the kernel.
+        """
+        if items <= 0:
+            return 0.0
+        if n_units <= 0:
+            return math.inf
+        per_unit = self.fleet_throughput(kernel)
+        if per_unit is None:
+            return None
+        return float(items) / (per_unit * n_units)
 
     def kernels(self) -> List[str]:
         with self._lock:

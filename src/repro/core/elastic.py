@@ -108,6 +108,16 @@ class ElasticSchedule:
     def __iter__(self):
         return iter(self.events)
 
+    def merge(self, other: "ElasticSchedule") -> "ElasticSchedule":
+        """A new schedule holding both timelines (time-sorted on read).
+
+        The fleet layer composes membership from independent sources —
+        a failure trace's crashes/leaves and an autoscaler's joins — and
+        each source builds its own schedule; ``merge`` is how they become
+        one run timeline without either source knowing about the other.
+        """
+        return ElasticSchedule(self._events + list(other._events))
+
     @classmethod
     def from_mesh(
         cls,

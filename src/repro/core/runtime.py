@@ -468,6 +468,17 @@ class HeteroRuntime:
         self._units[name] = spec
         return spec
 
+    def deregister_unit(self, name: str) -> UnitSpec:
+        """Remove a unit from the registry (fleet scale-down path).
+
+        Only affects *future* runs — a run in flight resolved its specs
+        at call time and retires units through the elastic path instead.
+        Raises ``KeyError`` for unknown names so a double-drain is loud.
+        """
+        if name not in self._units:
+            raise KeyError(f"unknown unit {name!r}")
+        return self._units.pop(name)
+
     def set_speed(self, name: str, speed: float) -> None:
         self._units[name].speed = speed
 
@@ -856,7 +867,11 @@ class HeteroRuntime:
                 straggler=straggler,
             )
             wall = eng.run()
-            lost = any(ev.get("action") == "lost" for ev in eng.events)
+            # "dead" (heartbeat conviction) is as much a loss as "lost"
+            # (EOF): either way a unit departed with work requeued, so an
+            # under-covered run must raise instead of reporting quietly.
+            lost = any(ev.get("action") in ("lost", "dead")
+                       for ev in eng.events)
             if (elastic or lost) and sched.items_done() < expected:
                 raise RuntimeError(
                     f"run stalled: {sched.items_done()}/{expected} items "

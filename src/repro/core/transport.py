@@ -67,6 +67,7 @@ from __future__ import annotations
 
 import argparse
 import hashlib
+import logging
 import math
 import os
 import pickle
@@ -86,10 +87,13 @@ from .backends import (
     BackendUnit,
     CompletionBus,
     CompletionRecord,
+    WorkerDead,
     WorkerLost,
     make_backend,
 )
 from .scheduler import Chunk
+
+logger = logging.getLogger(__name__)
 
 __all__ = [
     "Transport",
@@ -349,6 +353,12 @@ class FlakyTransport(Transport):
     fault both directions.  Faults never raise: a frame racing a closing
     transport is just another drop, which the reliability protocol must
     absorb anyway.
+
+    ``kinds`` restricts injection to frames of the named kinds (e.g.
+    ``kinds=("heartbeat",)`` faults the liveness signal while work and
+    completion frames ride a clean medium) — the lever the
+    heartbeat-loss-vs-merely-slow battery needs to prove that a lossy
+    heartbeat path alone never convicts a live worker.
     """
 
     def __init__(
@@ -361,8 +371,10 @@ class FlakyTransport(Transport):
         reorder: float = 0.0,
         delay: float = 0.0,
         max_delay: float = 0.02,
+        kinds: Optional[Tuple[str, ...]] = None,
     ) -> None:
         self.inner = inner
+        self.kinds = tuple(kinds) if kinds is not None else None
         self.drop = float(drop)
         self.duplicate = float(duplicate)
         self.reorder = float(reorder)
@@ -381,6 +393,9 @@ class FlakyTransport(Transport):
             pass  # racing a close: equivalent to a drop
 
     def send(self, frame: dict) -> None:
+        if self.kinds is not None and frame.get("kind") not in self.kinds:
+            self._deliver(frame)  # out-of-scope kinds ride a clean medium
+            return
         with self._lock:
             self.stats["sent"] += 1
             if self._rng.random() < self.drop:
@@ -438,9 +453,16 @@ class RemoteWorker:
 
     Frames handled:
 
-    * ``hello {unit, backend}`` — start hosting a backend unit for
-      ``unit`` (idempotent: duplicates re-ack with ``ready``); a bad
-      backend spec answers with an ``error`` frame instead.
+    * ``hello {unit, backend, heartbeat?}`` — start hosting a backend
+      unit for ``unit`` (idempotent: duplicates re-ack with ``ready``);
+      a bad backend spec answers with an ``error`` frame instead.  A
+      positive ``heartbeat`` interval subscribes the client to periodic
+      ``heartbeat {unit, queue_depth, inflight}`` frames — the ``busy``
+      liveness answer generalized from "this seq is executing" to "this
+      unit is alive", carrying the worker's accepted-but-uncompleted
+      chunk count so the client can drive membership and autoscaling
+      decisions from observed depth.  No request → no heartbeat frames
+      (the legacy wire shape, exactly).
     * ``register_fn {unit, fn_id, fn}`` — the dispatch fast path's
       descriptor cache: store ``fn`` in the session registry so later
       work items can reference it by ``fn_id`` instead of re-shipping
@@ -496,6 +518,9 @@ class RemoteWorker:
         # unit -> seq -> (t_accept, chunk), insertion-ordered
         self._inflight: Dict[str, "OrderedDict[int, Tuple[float, Chunk]]"] = {}
         self._done_cache: Dict[str, "OrderedDict[int, dict]"] = {}
+        self._hb_interval: Dict[str, float] = {}   # unit -> requested secs
+        self._hb_next: Dict[str, float] = {}       # unit -> next beat due
+        self._beater: Optional[threading.Thread] = None
         self._lock = threading.Lock()
         self._stop = threading.Event()
 
@@ -524,7 +549,18 @@ class RemoteWorker:
             reason = exc
         try:
             self.transport.send(self._strip(frame, reason))
-        except TransportError:
+        except Exception as exc:
+            # Not just TransportError: *any* failure here (a send-path bug,
+            # an OSError the transport did not wrap) used to propagate into
+            # the pump thread and kill it silently — the client would see a
+            # stall and burn its whole retransmit budget.  The session is
+            # unrecoverable either way, so end it deliberately: the client
+            # gets a definitive EOF (WorkerLost → exact-once requeue)
+            # instead of silence.
+            logger.warning(
+                "worker session send failed twice (%r after strip %r); "
+                "ending session", exc, reason,
+            )
             self._stop.set()
 
     # -- inbound -------------------------------------------------------------
@@ -545,6 +581,20 @@ class RemoteWorker:
                 self._floor[name] = 0
                 self._inflight[name] = OrderedDict()
                 self._done_cache[name] = OrderedDict()
+        hb = frame.get("heartbeat")
+        if isinstance(hb, (int, float)) and hb > 0:
+            start_beater = False
+            with self._lock:
+                self._hb_interval[name] = float(hb)
+                self._hb_next[name] = 0.0  # first beat right after ready
+                if self._beater is None or not self._beater.is_alive():
+                    self._beater = threading.Thread(
+                        target=self._beat_loop, daemon=True,
+                        name="eneac-worker-beat",
+                    )
+                    start_beater = True
+            if start_beater:
+                self._beater.start()
         self._send({"kind": "ready", "unit": name})
 
     def _handle_register(self, frame: dict) -> None:
@@ -621,8 +671,42 @@ class RemoteWorker:
             self._floor.pop(name, None)
             self._inflight.pop(name, None)
             self._done_cache.pop(name, None)
+            self._hb_interval.pop(name, None)
+            self._hb_next.pop(name, None)
         if unit is not None:
             unit.close()  # waits for in-flight chunks (graceful drain)
+
+    def _beat_loop(self) -> None:
+        """Send each subscribed unit's periodic ``heartbeat`` frame.
+
+        A dedicated timer thread (not the completion pump — the pump
+        sleeps up to ``poll_interval`` per wakeup, which would starve
+        intervals tighter than that).  ``queue_depth`` is the worker's
+        accepted-but-uncompleted chunk count for the unit; ``inflight``
+        is the slice of that depth the unit's backend can actually be
+        executing right now (capped by its capacity).  Exits when the
+        last subscription is dropped; a later ``hello`` restarts it.
+        """
+        while not self._stop.is_set():
+            beats: List[dict] = []
+            now = time.perf_counter()
+            with self._lock:
+                if not self._hb_interval:
+                    return
+                shortest = min(self._hb_interval.values())
+                for name, interval in self._hb_interval.items():
+                    if now < self._hb_next.get(name, 0.0):
+                        continue
+                    self._hb_next[name] = now + interval
+                    depth = len(self._inflight.get(name, ()))
+                    unit = self._units.get(name)
+                    cap = max(int(getattr(unit, "capacity", 1) or 1), 1)
+                    beats.append({"kind": "heartbeat", "unit": name,
+                                  "queue_depth": depth,
+                                  "inflight": min(depth, cap)})
+            for beat in beats:
+                self._send(beat)
+            self._stop.wait(timeout=shortest / 2.0)
 
     def _pump(self) -> None:
         """Forward hosted-unit completions, one frame per unit per drain.
@@ -631,42 +715,61 @@ class RemoteWorker:
         into a single ``done_batch`` frame — the worker-side half of the
         frame-batching fast path; a lone completion keeps the legacy
         ``done`` frame shape.
+
+        The loop body is exception-proof: every completion is inserted
+        into the done cache *before* its frame is sent, so if anything
+        here throws, the item is recoverable — the client's retransmit
+        of the still-pending seq hits the dedup path and re-sends the
+        cached ``done``.  An uncaught exception must therefore never
+        kill this thread (the old behavior: a dead pump looked exactly
+        like a stalled worker until the client burned its whole
+        retransmit budget); it is logged and the pump keeps draining.
         """
         while not self._stop.is_set():
-            self.bus.wait(timeout=self.poll_interval)
-            grouped: "OrderedDict[str, List[dict]]" = OrderedDict()
-            for rec in self.bus.drain():
-                with self._lock:
-                    pend = self._inflight.get(rec.unit)
-                    entry = None
-                    if pend:
-                        for seq, (t_accept, chunk) in pend.items():
-                            if (chunk.start, chunk.stop) == (rec.chunk.start,
-                                                             rec.chunk.stop):
-                                entry = (seq, t_accept)
-                                del pend[seq]
-                                break
-                    if entry is None:
-                        continue  # completion of a bye'd unit's last chunk
-                    seq, t_accept = entry
-                    item = {
-                        "seq": seq, "chunk": rec.chunk,
-                        "elapsed": rec.elapsed, "t_accept": t_accept,
-                        "t_start": t_accept + rec.dispatch_latency,
-                        "error": rec.error, "result": rec.result,
-                    }
-                    cache = self._done_cache.get(rec.unit)
-                    if cache is not None:
-                        cache[seq] = item
-                        while len(cache) > _DONE_CACHE_DEPTH:
-                            cache.popitem(last=False)
-                grouped.setdefault(rec.unit, []).append(item)
-            for name, items in grouped.items():
-                if len(items) == 1:
-                    self._send({"kind": "done", "unit": name, **items[0]})
-                else:
-                    self._send({"kind": "done_batch", "unit": name,
-                                "items": items})
+            try:
+                self._pump_once()
+            except Exception as exc:
+                logger.warning(
+                    "worker completion pump error (%r); completions remain "
+                    "recoverable from the done cache via retransmit", exc,
+                )
+
+    def _pump_once(self) -> None:
+        """One bus wait + drain + send pass (see :meth:`_pump`)."""
+        self.bus.wait(timeout=self.poll_interval)
+        grouped: "OrderedDict[str, List[dict]]" = OrderedDict()
+        for rec in self.bus.drain():
+            with self._lock:
+                pend = self._inflight.get(rec.unit)
+                entry = None
+                if pend:
+                    for seq, (t_accept, chunk) in pend.items():
+                        if (chunk.start, chunk.stop) == (rec.chunk.start,
+                                                         rec.chunk.stop):
+                            entry = (seq, t_accept)
+                            del pend[seq]
+                            break
+                if entry is None:
+                    continue  # completion of a bye'd unit's last chunk
+                seq, t_accept = entry
+                item = {
+                    "seq": seq, "chunk": rec.chunk,
+                    "elapsed": rec.elapsed, "t_accept": t_accept,
+                    "t_start": t_accept + rec.dispatch_latency,
+                    "error": rec.error, "result": rec.result,
+                }
+                cache = self._done_cache.get(rec.unit)
+                if cache is not None:
+                    cache[seq] = item
+                    while len(cache) > _DONE_CACHE_DEPTH:
+                        cache.popitem(last=False)
+            grouped.setdefault(rec.unit, []).append(item)
+        for name, items in grouped.items():
+            if len(items) == 1:
+                self._send({"kind": "done", "unit": name, **items[0]})
+            else:
+                self._send({"kind": "done_batch", "unit": name,
+                            "items": items})
 
     # -- the loop ------------------------------------------------------------
     def serve(self) -> None:
@@ -697,13 +800,21 @@ class RemoteWorker:
         finally:
             self._stop.set()
             pump.join(timeout=10.0)
+            beater = self._beater
+            if beater is not None:
+                beater.join(timeout=5.0)
             with self._lock:
                 units, self._units = dict(self._units), {}
-            for unit in units.values():
+            for name, unit in units.items():
                 try:
                     unit.close()
-                except Exception:
-                    pass
+                except Exception as exc:
+                    # shutdown is best-effort, but a failed close is a
+                    # leaked backend (threads, subprocesses) — say so
+                    logger.warning(
+                        "failed to close hosted unit %r at session end: %r",
+                        name, exc,
+                    )
             self.transport.close()
 
     def stop(self) -> None:
@@ -838,6 +949,23 @@ class RemoteUnit(BackendUnit):
     retransmits post a :class:`~repro.core.backends.WorkerLost`
     completion instead — the engine's signal to requeue the in-flight
     chunks and drop this unit from the run.
+
+    Heartbeat liveness (fleet membership): ``heartbeat=SECS`` subscribes
+    to periodic worker ``heartbeat`` frames (requested via the ``hello``
+    handshake) and arms missed-heartbeat conviction — if *nothing* is
+    heard from the worker (heartbeats, completions, busy answers; any
+    frame proves the process is alive) for ``patience`` consecutive
+    intervals, the unit posts a
+    :class:`~repro.core.backends.WorkerDead` completion: the engine
+    retires it through the elastic path (``action="dead"``) without
+    waiting for a retransmit budget to burn down mid-chunk — and, unlike
+    the retransmit path, an *idle* unit's death is detected too, which
+    is what lets a :class:`~repro.core.fleet.FleetManager` convict
+    members between runs.  Conviction is patience-gated exactly like
+    :class:`~repro.core.straggler.StragglerDetector`: one late beat is
+    not a verdict, only sustained silence is.  The most recent heartbeat
+    payload is kept in :attr:`last_heartbeat` (``queue_depth`` /
+    ``inflight``) for membership and autoscaling observers.
     """
 
     kind_name = "remote"
@@ -854,6 +982,8 @@ class RemoteUnit(BackendUnit):
         connect_timeout: float = 10.0,
         batch_frames: Union[int, str] = 1,
         fn_cache: bool = True,
+        heartbeat: Optional[float] = None,
+        patience: int = 3,
     ) -> None:
         super().__init__(name)
         if (address is None) == (transport is None):
@@ -863,6 +993,10 @@ class RemoteUnit(BackendUnit):
                 f"remote_backend must be one of {_HOSTABLE}, "
                 f"got {remote_backend!r} (no proxy chains)"
             )
+        if heartbeat is not None and not float(heartbeat) > 0:
+            raise ValueError(f"heartbeat must be positive, got {heartbeat!r}")
+        if int(patience) < 1:
+            raise ValueError(f"patience must be >= 1, got {patience}")
         self.auto_batch = batch_frames == "auto"
         if self.auto_batch:
             self._batch = 1  # legacy wire shape until the link is measured
@@ -881,6 +1015,11 @@ class RemoteUnit(BackendUnit):
         self.max_retries = int(max_retries)
         self.connect_timeout = float(connect_timeout)
         self.fn_cache = bool(fn_cache)
+        self.heartbeat = None if heartbeat is None else float(heartbeat)
+        self.patience = int(patience)
+        self.last_heartbeat: Optional[dict] = None  # latest beat payload
+        self._last_heard = 0.0       # perf_counter of the last frame heard
+        self._closed = False
         # Adaptive-width state: raw frame transit vs. per-chunk service
         # EWMAs (seconds); kept across restarts — the link does not
         # forget its character when a session reconnects.
@@ -960,8 +1099,10 @@ class RemoteUnit(BackendUnit):
                 self.address, timeout=self.connect_timeout
             )
         self.lost = False
+        self._closed = False
         self._stop.clear()
         self._handshake()
+        self._last_heard = time.perf_counter()  # ready answered: alive now
         self._recv_thread = threading.Thread(
             target=self._recv_loop, daemon=True,
             name=f"eneac-remote-{self.name}",
@@ -972,6 +1113,8 @@ class RemoteUnit(BackendUnit):
         """hello → ready, retransmitting until the worker answers."""
         hello = {"kind": "hello", "unit": self.name,
                  "backend": self.remote_backend}
+        if self.heartbeat is not None:
+            hello["heartbeat"] = self.heartbeat
         deadline = time.perf_counter() + self.connect_timeout
         next_hello = 0.0
         while time.perf_counter() < deadline:
@@ -995,16 +1138,29 @@ class RemoteUnit(BackendUnit):
         )
 
     def close(self) -> None:
+        if self._closed:
+            return  # idempotent: a second close must not re-send bye
+        self._closed = True
         self._stop.set()
         if self._transport is not None and not self._transport.closed:
             try:
                 self._transport.send({"kind": "bye", "unit": self.name})
-            except TransportError:
-                pass
+            except TransportError as exc:
+                # A swallowed failure here used to leave the worker
+                # hosting a retired unit forever (it never saw the bye
+                # and the session stayed open).  The close still
+                # proceeds — the transport.close() below gives the
+                # worker a definitive EOF — but the failed drain is
+                # surfaced instead of silently dropped.
+                logger.warning(
+                    "unit %r: graceful bye failed (%r); closing the "
+                    "transport so the worker sees EOF instead",
+                    self.name, exc,
+                )
         thread = self._recv_thread
         if (thread is not None and thread.is_alive()
                 and thread is not threading.current_thread()):
-            thread.join(timeout=5.0)
+            thread.join(timeout=5.0)  # bounded: never hangs the caller
         self._recv_thread = None
         if self._transport is not None:
             self._transport.close()
@@ -1130,6 +1286,10 @@ class RemoteUnit(BackendUnit):
     # -- the receiver thread -------------------------------------------------
     def _recv_loop(self) -> None:
         tick = max(min(self.retry_interval / 2.0, 0.05), 0.005)
+        if self.heartbeat is not None:
+            # convictions must be checked a few times per interval or a
+            # coarse tick adds a whole tick of detection latency
+            tick = min(tick, self.heartbeat / 4.0)
         while not self._stop.is_set():
             try:
                 frame = self._transport.recv(timeout=tick)
@@ -1137,8 +1297,34 @@ class RemoteUnit(BackendUnit):
                 self._fail_pending("connection closed by the worker")
                 return
             if frame is not None:
+                # any frame from the session proves the worker process is
+                # alive, whatever unit or seq it concerns
+                self._last_heard = time.perf_counter()
                 self._on_frame(frame)
+            if self._convict_if_silent():
+                return
             self._maybe_retransmit()
+
+    def _convict_if_silent(self) -> bool:
+        """Missed-heartbeat conviction (heartbeat-enabled units only).
+
+        Patience-gated like the straggler detector: the worker is
+        convicted as *dead* only after ``patience`` full intervals with
+        no frame of any kind — one dropped or late beat is absorbed.
+        Unlike retransmit exhaustion this fires for an idle unit too,
+        so a dead worker is discovered without submitting work to it.
+        """
+        if self.heartbeat is None or self.lost:
+            return False
+        silent_for = time.perf_counter() - self._last_heard
+        if silent_for <= self.patience * self.heartbeat:
+            return False
+        self._fail_pending(
+            f"no heartbeat for {silent_for:.3f}s "
+            f"(> patience {self.patience} x {self.heartbeat}s)",
+            error_cls=WorkerDead,
+        )
+        return True
 
     def _maybe_retransmit(self) -> None:
         exhausted = False
@@ -1172,6 +1358,11 @@ class RemoteUnit(BackendUnit):
         if frame.get("unit") != self.name:
             return
         kind = frame.get("kind")
+        if kind == "heartbeat":
+            # liveness already noted in the recv loop; keep the payload
+            # (queue_depth / inflight) for membership + autoscaling eyes
+            self.last_heartbeat = frame
+            return
         if kind == "busy":
             # the worker is alive and executing this pending seq: the
             # retransmit budget bounds unresponsiveness, not work time
@@ -1240,26 +1431,32 @@ class RemoteUnit(BackendUnit):
         ))
 
     # -- failure ------------------------------------------------------------
-    def _post_lost(self, chunk: Chunk, why: str) -> None:
+    def _post_lost(self, chunk: Optional[Chunk], why: str,
+                   error_cls: type = WorkerLost) -> None:
         self.lost = True
         bus = self._bus
         if bus is not None:
             bus.post(CompletionRecord(
                 unit=self.name, chunk=chunk, elapsed=0.0, dispatch_latency=0.0,
-                error=WorkerLost(f"unit {self.name!r}: {why}"), result=None,
+                error=error_cls(f"unit {self.name!r}: {why}"), result=None,
             ))
 
-    def _fail_pending(self, why: str) -> None:
+    def _fail_pending(self, why: str, *, error_cls: type = WorkerLost) -> None:
         with self._plock:
             pending, self._pending = self._pending, OrderedDict()
             self._unsent = []
         self.lost = True
         self._stop.set()
-        # one WorkerLost is enough: the engine answers it by removing the
-        # unit, which requeues *all* of its outstanding chunks at once
+        # one WorkerLost/WorkerDead is enough: the engine answers it by
+        # removing the unit, which requeues *all* of its outstanding
+        # chunks at once.  A heartbeat conviction with nothing pending
+        # (idle unit) still posts — with chunk=None — so membership
+        # observers learn of the death without waiting for a submit.
         first = next(iter(pending.values()), None)
         if first is not None:
-            self._post_lost(first["chunk"], why)
+            self._post_lost(first["chunk"], why, error_cls)
+        elif error_cls is not WorkerLost:
+            self._post_lost(None, why, error_cls)
 
     def describe(self) -> str:
         where = self.address if self.address is not None else "injected transport"

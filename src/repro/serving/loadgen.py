@@ -159,7 +159,10 @@ def make_trace(
 
 
 def _pct(xs: Sequence[float], p: float) -> float:
-    return float(np.percentile(list(xs), p)) if len(xs) else 0.0
+    # nan, not 0.0: a run that completed nothing has *no* latency
+    # distribution, and a 0.0s p99 reads as an impossibly good pass.
+    # Consumers (tools/check_bench.py) treat nan as "no data".
+    return float(np.percentile(list(xs), p)) if len(xs) else float("nan")
 
 
 def summarize(engine: ServingEngine, *, wall: float,
@@ -181,11 +184,11 @@ def summarize(engine: ServingEngine, *, wall: float,
         "shed": len(engine.shed),
         "wall_time_s": wall,
         "tokens": tokens,
-        "mean_latency_s": float(np.mean(lats)) if lats else 0.0,
+        "mean_latency_s": float(np.mean(lats)) if lats else float("nan"),
         "p50_latency_s": _pct(lats, 50.0),
         "p95_latency_s": _pct(lats, 95.0),
         "p99_latency_s": _pct(lats, 99.0),
-        "mean_ttft_s": float(np.mean(ttfts)) if ttfts else 0.0,
+        "mean_ttft_s": float(np.mean(ttfts)) if ttfts else float("nan"),
         "p95_ttft_s": _pct(ttfts, 95.0),
         "tokens_per_s": tokens / wall,
         "goodput_tokens": good,

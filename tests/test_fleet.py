@@ -1,0 +1,543 @@
+"""Fleet membership (ISSUE 10): discovery, liveness, autoscaling, recovery.
+
+The contracts under test:
+
+* :class:`~repro.core.fleet.HeartbeatBook` convicts exactly the silent —
+  crashes are always noticed, slow-but-alive members never are
+  (patience-gated, mirroring the straggler detector), late beats do not
+  resurrect, and the event log is time-monotone by construction;
+* :class:`~repro.core.fleet.Autoscaler` sizes from observed queue depth
+  and *learned* per-unit throughput, scales up whole-gap / drains one at
+  a time under a cooldown, and never scales on a model with no data;
+* :func:`~repro.core.fleet.simulate_fleet` — the CI battery: ≥30 seeded
+  join/leave/crash/slow churn traces over ≥100 virtual units, each
+  asserting zero false convictions, zero missed crashes, exact-once
+  coverage through the real engine, and monotone events;
+* :func:`~repro.checkpoint.coverage.checkpointed_parallel_for` resumes
+  a dead run from its last coverage bitmap — only the remainder is
+  recomputed, through the verifying restore path;
+* :class:`~repro.core.fleet.FleetManager` (``slow`` tier): real
+  ``spawn_worker`` subprocesses joined/drained/killed -9 mid-run, with
+  the lost chunk requeued exact-once to the survivors.
+
+CI's ``fleet`` job runs this module under ``tools/run_with_timeout.py``.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _propcheck import given, settings, strategies as st
+
+from repro.core import (
+    Autoscaler,
+    ElasticSchedule,
+    FailureTrace,
+    FleetManager,
+    HeartbeatBook,
+    HeteroRuntime,
+    SimulatedClock,
+    TraceEvent,
+    WorkerKind,
+    simulate_fleet,
+)
+from repro.core.costmodel import CostModel
+from repro.checkpoint import (
+    Checkpointer,
+    CoverageMap,
+    checkpointed_parallel_for,
+    load_coverage,
+    save_coverage,
+)
+
+
+def assert_exact_tiling(spans, n_items):
+    assert spans, "no chunks completed"
+    assert spans[0][0] == 0
+    assert spans[-1][1] == n_items
+    for (a, b), (c, d) in zip(spans, spans[1:]):
+        assert b == c, f"gap or overlap at {b}:{c}"
+
+
+# ---------------------------------------------------------------------------
+# membership ledger
+# ---------------------------------------------------------------------------
+class TestHeartbeatBook:
+    def test_silence_convicts_after_patience(self):
+        book = HeartbeatBook(heartbeat=0.1, patience=3)
+        book.join(0.0, "a")
+        book.join(0.0, "b")
+        for t in (0.1, 0.2, 0.3):
+            book.beat(t, "a")
+        assert book.sweep(0.3) == []          # b silent 0.3 <= limit
+        assert book.sweep(0.31) == ["b"]      # b silent 0.31 > limit
+        assert book.members == ["a"]
+        assert [e["action"] for e in book.events] == ["join", "join", "dead"]
+
+    def test_slow_beats_within_patience_survive(self):
+        book = HeartbeatBook(heartbeat=0.1, patience=3)
+        book.join(0.0, "slow")
+        t = 0.0
+        while t < 2.0:                        # 2.5x stretched, still alive
+            t += 0.25
+            book.beat(t, "slow")
+            assert book.sweep(t) == []
+        assert book.members == ["slow"]
+
+    def test_late_beat_does_not_resurrect(self):
+        book = HeartbeatBook(heartbeat=0.1, patience=2)
+        book.join(0.0, "a")
+        book.join(0.0, "b")
+        book.beat(0.5, "a")
+        assert book.sweep(0.5) == ["b"]
+        book.beat(0.6, "b")                   # in-flight beat after verdict
+        assert "b" not in book
+        assert book.members == ["a"]
+
+    def test_graceful_leave_is_not_a_conviction(self):
+        book = HeartbeatBook(heartbeat=0.1, patience=3)
+        book.join(0.0, "a")
+        book.leave(0.2, "a")
+        assert book.sweep(9.9) == []
+        assert [e["action"] for e in book.events] == ["join", "leave"]
+
+    def test_time_travel_raises(self):
+        book = HeartbeatBook(heartbeat=0.1, patience=3)
+        book.join(1.0, "a")
+        with pytest.raises(ValueError, match="backwards"):
+            book.beat(0.5, "a")
+
+    def test_duplicate_join_and_unknown_leave_raise(self):
+        book = HeartbeatBook(heartbeat=0.1, patience=3)
+        book.join(0.0, "a")
+        with pytest.raises(ValueError, match="already a member"):
+            book.join(0.1, "a")
+        with pytest.raises(ValueError, match="not a member"):
+            book.leave(0.2, "ghost")
+
+    def test_queue_depth_and_deadline(self):
+        book = HeartbeatBook(heartbeat=0.5, patience=4)
+        book.join(0.0, "a")
+        book.beat(1.0, "a", queue_depth=7, inflight=2)
+        assert book.queue_depth() == 7
+        assert book.deadline("a") == pytest.approx(3.0)
+        with pytest.raises(KeyError):
+            book.deadline("ghost")
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="heartbeat"):
+            HeartbeatBook(heartbeat=0.0)
+        with pytest.raises(ValueError, match="patience"):
+            HeartbeatBook(heartbeat=0.1, patience=0)
+
+
+# ---------------------------------------------------------------------------
+# autoscaler
+# ---------------------------------------------------------------------------
+def _model(items_per_s=100.0, kernel="k"):
+    cm = CostModel()
+    cm.observe("u0", kernel, items=int(items_per_s), elapsed=1.0)
+    cm.observe("u1", kernel, items=int(items_per_s), elapsed=1.0)
+    return cm
+
+
+class TestAutoscaler:
+    def test_target_sizes_from_learned_throughput(self):
+        a = Autoscaler(_model(), kernel="k", horizon=1.0, max_units=16)
+        # 500 items / (100 items/s * 1s horizon) -> 5 units
+        assert a.target(500) == 5
+        assert a.target(0) == a.min_units
+
+    def test_scale_up_closes_whole_gap(self):
+        a = Autoscaler(_model(), kernel="k", horizon=1.0, max_units=16)
+        assert a.decide(0.0, queue_depth=500, n_units=2) == 3
+
+    def test_scale_down_drains_one_per_cooldown(self):
+        a = Autoscaler(_model(), kernel="k", horizon=1.0, max_units=16,
+                       cooldown_s=1.0)
+        assert a.decide(0.0, queue_depth=0, n_units=5) == -1
+        assert a.decide(0.5, queue_depth=0, n_units=4) == 0   # cooling down
+        assert a.decide(1.1, queue_depth=0, n_units=4) == -1
+
+    def test_no_data_never_scales(self):
+        a = Autoscaler(_model(), kernel="never-observed")
+        assert a.decide(0.0, queue_depth=10_000, n_units=1) == 0
+        assert Autoscaler(None).decide(0.0, queue_depth=10, n_units=1) == 0
+
+    def test_clamped_to_bounds(self):
+        a = Autoscaler(_model(), kernel="k", horizon=0.01, max_units=4)
+        assert a.target(10_000) == 4
+        a2 = Autoscaler(_model(), kernel="k", horizon=100.0, min_units=2)
+        assert a2.target(1) == 2
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="horizon"):
+            Autoscaler(None, horizon=0)
+        with pytest.raises(ValueError, match="min_units"):
+            Autoscaler(None, min_units=0)
+        with pytest.raises(ValueError, match="max_units"):
+            Autoscaler(None, min_units=4, max_units=2)
+
+
+# ---------------------------------------------------------------------------
+# seeded churn traces
+# ---------------------------------------------------------------------------
+class TestFailureTrace:
+    def test_same_seed_same_trace(self):
+        a = FailureTrace.generate(7, num_units=50)
+        b = FailureTrace.generate(7, num_units=50)
+        assert a.events == b.events
+        assert a.initial_units == b.initial_units
+
+    def test_different_seeds_differ(self):
+        a = FailureTrace.generate(1, num_units=50)
+        b = FailureTrace.generate(2, num_units=50)
+        assert a.events != b.events
+
+    def test_survivor_majority_enforced(self):
+        with pytest.raises(ValueError, match="majority"):
+            FailureTrace.generate(0, num_units=20, crash_frac=0.4,
+                                  leave_frac=0.3)
+
+    def test_event_validation(self):
+        with pytest.raises(ValueError, match="unknown trace action"):
+            TraceEvent(t=1.0, action="explode", unit="u0")
+
+
+# ---------------------------------------------------------------------------
+# the simulation battery (the ISSUE's headline): >=30 seeds, >=100 units
+# ---------------------------------------------------------------------------
+class TestFleetSimulationBattery:
+    @given(seed=st.integers(0, 10**6))
+    @settings(max_examples=30, deadline=None)
+    def test_churn_replay_every_seed(self, seed):
+        res = simulate_fleet(seed, num_units=100, heartbeat=0.05,
+                             patience=3, horizon=10.0)
+        # liveness verdicts match the trace's ground truth
+        assert res.false_convictions == [], (
+            f"seed {seed}: convicted live units {res.false_convictions}")
+        assert res.missed_crashes == [], (
+            f"seed {seed}: crashes never noticed {res.missed_crashes}")
+        assert set(res.convicted) == set(res.trace.crashed)
+        # conviction is prompt: within patience x heartbeat + one
+        # (possibly slow-stretched) beat interval of the crash
+        for unit, delay in res.conviction_delay.items():
+            assert delay <= 3 * 0.05 + 0.05 * 2.5 + 1e-6, (
+                f"seed {seed}: {unit} convicted {delay:.3f}s after crash")
+        # the membership timeline preserved exact-once coverage
+        rep = res.report
+        assert rep.items == 100 * 6
+        assert_exact_tiling(rep.coverage, 100 * 6)
+        # both event logs are time-monotone
+        ts = [e["t"] for e in res.book_events]
+        assert ts == sorted(ts)
+        ts = [e["t"] for e in (rep.events or [])]
+        assert ts == sorted(ts)
+
+    def test_losses_and_joins_land_in_report(self):
+        res = simulate_fleet(3, num_units=100)
+        actions = {e["action"] for e in (res.report.events or [])}
+        # seeded churn produces real membership traffic in the report
+        assert "leave" in actions
+        assert "join" in actions
+
+    def test_detection_latency_is_modeled(self):
+        # crashes leave at *conviction* time, not the instant of death
+        res = simulate_fleet(5, num_units=100)
+        crash_t = {e.unit: e.t for e in res.trace.events
+                   if e.action == "crash"}
+        for ev in res.schedule.events:
+            if ev.unit in crash_t and ev.action == "leave":
+                assert ev.t > crash_t[ev.unit]
+
+
+# ---------------------------------------------------------------------------
+# elastic merge + drain prediction (plumbing the fleet layer rides on)
+# ---------------------------------------------------------------------------
+class TestFleetPlumbing:
+    def test_elastic_merge_is_time_sorted_union(self):
+        a = ElasticSchedule().leave(0.5, "u0").leave(2.0, "u1")
+        b = ElasticSchedule().join(1.0, "j0", kind="cc", speed=2.0)
+        merged = a.merge(b)
+        assert [(e.t, e.action, e.unit) for e in merged] == [
+            (0.5, "leave", "u0"), (1.0, "join", "j0"), (2.0, "leave", "u1")]
+        assert len(a) == 2 and len(b) == 1  # inputs untouched
+
+    def test_predict_drain(self):
+        cm = _model(100.0)
+        assert cm.predict_drain("k", 500, 2) == pytest.approx(2.5)
+        assert cm.predict_drain("k", 0, 2) == 0.0
+        assert cm.predict_drain("k", 500, 0) == float("inf")
+        assert cm.predict_drain("unknown", 500, 2) is None
+
+
+# ---------------------------------------------------------------------------
+# checkpoint-backed recovery
+# ---------------------------------------------------------------------------
+class _Ledger:
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.ids = []
+
+    def __call__(self, chunk):
+        with self.lock:
+            self.ids.extend(chunk.indices())
+
+
+def _sim_runtime(n=4):
+    rt = HeteroRuntime(clock=SimulatedClock())
+    for i in range(n):
+        rt.register_unit(f"cc{i}", WorkerKind.CC, speed=1.0)
+    return rt
+
+
+class TestCoverageMap:
+    def test_mark_and_remaining_spans(self):
+        cov = CoverageMap(100)
+        cov.mark(0, 40)
+        cov.mark(60, 70)
+        assert cov.remaining_spans() == [(40, 60), (70, 100)]
+        assert cov.items_done == 50
+        assert not cov.complete
+        cov.mark(40, 60)
+        cov.mark(70, 100)
+        assert cov.complete and cov.remaining_spans() == []
+
+    def test_bitmap_shape_is_fixed(self):
+        cov = CoverageMap(64)
+        cov.mark(0, 63)
+        assert cov.tree()["coverage_done"].shape == (64,)
+        with pytest.raises(ValueError, match="shape"):
+            CoverageMap(64, done=np.zeros(32, dtype=bool))
+
+    def test_roundtrip_through_checkpointer(self, tmp_path):
+        ckpt = Checkpointer(tmp_path)
+        cov = CoverageMap(128)
+        cov.mark(0, 100)
+        save_coverage(ckpt, cov.items_done, cov, blocking=True)
+        ckpt.wait_all()
+        loaded, step = load_coverage(ckpt, 128)
+        assert step == 100
+        assert np.array_equal(loaded.done, cov.done)
+
+    def test_wrong_space_size_fails_loudly(self, tmp_path):
+        ckpt = Checkpointer(tmp_path)
+        save_coverage(ckpt, 1, CoverageMap(128), blocking=True)
+        ckpt.wait_all()
+        with pytest.raises(ValueError):
+            load_coverage(ckpt, 256)
+
+
+class TestCheckpointedParallelFor:
+    def test_fresh_run_covers_exactly_once(self, tmp_path):
+        led = _Ledger()
+        run = checkpointed_parallel_for(
+            _sim_runtime(), led, 1000, checkpointer=Checkpointer(tmp_path),
+            policy="multidynamic", acc_chunk=16)
+        assert run.items_run == 1000 and run.rounds == 4
+        assert not run.resumed
+        assert sorted(led.ids) == list(range(1000))
+
+    def test_dead_run_resumes_from_bitmap(self, tmp_path):
+        # simulate a mid-run death: a partial bitmap is on disk, nothing
+        # else survives.  The restart must execute ONLY the remainder.
+        ckpt = Checkpointer(tmp_path)
+        cov = CoverageMap(1000)
+        cov.mark(0, 700)
+        cov.mark(800, 900)
+        save_coverage(ckpt, cov.items_done, cov, blocking=True)
+        ckpt.wait_all()
+
+        led = _Ledger()
+        run = checkpointed_parallel_for(
+            _sim_runtime(), led, 1000, checkpointer=ckpt,
+            policy="multidynamic", acc_chunk=16)
+        assert run.resumed and run.resumed_items_done == 800
+        assert run.items_run == 200
+        assert sorted(led.ids) == list(range(700, 800)) + list(range(900, 1000))
+
+    def test_complete_run_resumes_to_noop(self, tmp_path):
+        ckpt = Checkpointer(tmp_path)
+        led = _Ledger()
+        checkpointed_parallel_for(_sim_runtime(), led, 500,
+                                  checkpointer=ckpt, policy="multidynamic",
+                                  acc_chunk=16)
+        led2 = _Ledger()
+        run = checkpointed_parallel_for(_sim_runtime(), led2, 500,
+                                        checkpointer=ckpt,
+                                        policy="multidynamic", acc_chunk=16)
+        assert run.items_run == 0 and led2.ids == []
+
+    def test_resume_false_recomputes(self, tmp_path):
+        ckpt = Checkpointer(tmp_path)
+        checkpointed_parallel_for(_sim_runtime(), _Ledger(), 300,
+                                  checkpointer=ckpt, policy="multidynamic",
+                                  acc_chunk=16)
+        led = _Ledger()
+        run = checkpointed_parallel_for(_sim_runtime(), led, 300,
+                                        checkpointer=ckpt, resume=False,
+                                        policy="multidynamic", acc_chunk=16)
+        assert run.items_run == 300
+        assert sorted(led.ids) == list(range(300))
+
+    def test_item_cost_remaps_onto_remainder(self, tmp_path):
+        ckpt = Checkpointer(tmp_path)
+        cov = CoverageMap(100)
+        cov.mark(0, 90)
+        save_coverage(ckpt, 90, cov, blocking=True)
+        ckpt.wait_all()
+        cost = [1.0] * 90 + [5.0] * 10
+        run = checkpointed_parallel_for(
+            _sim_runtime(2), _Ledger(), 100, checkpointer=ckpt,
+            policy="multidynamic", acc_chunk=4, item_cost=cost)
+        assert run.items_run == 10
+
+    def test_rejected_kwargs(self, tmp_path):
+        with pytest.raises(ValueError, match="elastic"):
+            checkpointed_parallel_for(
+                _sim_runtime(), _Ledger(), 10,
+                checkpointer=Checkpointer(tmp_path),
+                elastic=ElasticSchedule())
+
+
+# ---------------------------------------------------------------------------
+# wall-clock fleet manager (policy plumbing on fake workers)
+# ---------------------------------------------------------------------------
+class _FakeHandle:
+    _port = 40000
+
+    def __init__(self):
+        _FakeHandle._port += 1
+        self.address = f"127.0.0.1:{_FakeHandle._port}"
+        self.alive = True
+        self.killed = False
+        self.terminated = False
+
+    def terminate(self, timeout=10.0):
+        self.alive = False
+        self.terminated = True
+
+    def kill(self):
+        self.alive = False
+        self.killed = True
+
+
+class TestFleetManagerPolicy:
+    def test_spawn_registers_heartbeat_spec(self):
+        rt = HeteroRuntime()
+        fm = FleetManager(rt, heartbeat=0.25, patience=4, spawn=_FakeHandle)
+        name = fm.spawn_unit()
+        assert name in rt.units
+        spec = rt.units[name].backend
+        assert "heartbeat=0.25" in spec and "patience=4" in spec
+        fm.shutdown()
+        assert name not in rt.units
+
+    def test_scale_to_and_drain_order(self):
+        rt = HeteroRuntime()
+        fm = FleetManager(rt, spawn=_FakeHandle)
+        names = fm.scale_to(3)
+        assert len(fm) == 3 and sorted(names) == fm.members
+        handles = {n: fm.handle(n) for n in fm.members}
+        fm.scale_to(1)
+        assert len(fm) == 1
+        # newest members drained first; deregistered before termination
+        assert fm.members == ["fleet0"]
+        assert handles["fleet2"].terminated and handles["fleet1"].terminated
+        assert set(rt.units) == {"fleet0"}
+        fm.shutdown()
+
+    def test_kill_keeps_registration_until_reaped(self):
+        rt = HeteroRuntime()
+        fm = FleetManager(rt, spawn=_FakeHandle)
+        fm.scale_to(2)
+        fm.kill_unit("fleet1")
+        assert "fleet1" in rt.units     # crash is the engine's to detect
+        assert fm.reap() == ["fleet1"]
+        assert "fleet1" not in rt.units
+        assert [e["action"] for e in fm.events][-2:] == ["kill", "dead"]
+        fm.shutdown()
+
+    def test_autoscale_step_applies_policy(self):
+        rt = HeteroRuntime()
+        scaler = Autoscaler(_model(), kernel="k", horizon=1.0,
+                            max_units=8, cooldown_s=0.0)
+        fm = FleetManager(rt, autoscaler=scaler, spawn=_FakeHandle)
+        fm.scale_to(1)
+        assert fm.autoscale_step(500, now=0.0) == 4   # 500/(100*1) -> 5
+        assert len(fm) == 5
+        assert fm.autoscale_step(0, now=1.0) == -1    # drain one
+        assert len(fm) == 4
+        fm.shutdown()
+
+    def test_failed_registration_terminates_the_orphan(self):
+        rt = HeteroRuntime()
+        fm = FleetManager(rt, spawn=_FakeHandle)
+        rt.register_unit("fleet0", WorkerKind.CC,
+                         work_fn=lambda c: None)   # name collision ahead
+        with pytest.raises(ValueError, match="duplicate"):
+            fm.spawn_unit()
+        assert len(fm) == 0   # no half-joined member left behind
+
+
+# ---------------------------------------------------------------------------
+# real subprocess fleet (slow tier; CI fleet job runs it wall-clock)
+# ---------------------------------------------------------------------------
+class _SharedSleep:
+    """Picklable slow work (executes worker-side; effects client-side
+    are irrelevant — coverage is asserted from the report)."""
+
+    def __call__(self, chunk):
+        time.sleep(chunk.size * 2e-4)
+
+
+_shared_sleep = _SharedSleep()
+
+
+@pytest.mark.slow
+class TestSubprocessFleet:
+    def test_spawn_run_drain(self):
+        rt = HeteroRuntime()
+        with FleetManager(rt, heartbeat=0.2, patience=5) as fm:
+            fm.scale_to(2)
+            assert len(fm) == 2
+            rep = rt.parallel_for(_shared_sleep, num_items=200,
+                                  policy="multidynamic", engine="interrupt",
+                                  acc_chunk=8)
+            assert rep.items == 200
+            assert_exact_tiling(rep.coverage, 200)
+            assert not [e for e in (rep.events or [])
+                        if e["action"] in ("lost", "dead")]
+            fm.drain_unit(fm.members[-1])
+            assert len(fm) == 1
+        assert len(fm) == 0
+
+    def test_kill_dash_nine_mid_run_requeues_exact_once(self):
+        # the acceptance line: a worker SIGKILLed mid-run is detected
+        # (EOF or heartbeat silence), retired, and its chunk requeued —
+        # the run completes with exact coverage on the survivors
+        rt = HeteroRuntime()
+        with FleetManager(rt, heartbeat=0.2, patience=5) as fm:
+            fm.scale_to(3)
+            victim = fm.members[-1]
+            killer = threading.Timer(0.3, fm.handle(victim).kill)
+            killer.start()
+            try:
+                rep = rt.parallel_for(_shared_sleep, num_items=400,
+                                      policy="multidynamic",
+                                      engine="interrupt", acc_chunk=8)
+            finally:
+                killer.cancel()
+            assert rep.items == 400
+            assert_exact_tiling(rep.coverage, 400)
+            losses = [e for e in (rep.events or [])
+                      if e["action"] in ("lost", "dead")]
+            assert len(losses) <= 1
+            if losses:
+                assert losses[0]["unit"] == victim
+            assert fm.reap() in ([victim], [])

@@ -1337,3 +1337,367 @@ class TestSubprocessWorkers:
             assert len(lost) <= 1  # at most one loss event for one worker
         finally:
             handle.terminate()
+
+
+# ---------------------------------------------------------------------------
+# heartbeat liveness (ISSUE 10): silence is detected, slowness is not
+# ---------------------------------------------------------------------------
+def heartbeat_loopback_unit(name, *, heartbeat=0.02, patience=3,
+                            retry_interval=0.02, max_retries=600,
+                            hb_seed=None, **hb_faults):
+    """A loopback unit with heartbeat liveness; ``hb_faults`` (with
+    ``hb_seed``) fault ONLY the worker's heartbeat frames — work and
+    completion frames ride a clean medium."""
+    client_end, worker_end = LoopbackTransport.pair()
+    worker_side = worker_end
+    if hb_seed is not None:
+        worker_side = FlakyTransport(worker_end, seed=hb_seed,
+                                     kinds=("heartbeat",), **hb_faults)
+    worker = RemoteWorker(worker_side, poll_interval=0.02)
+    threading.Thread(target=worker.serve, daemon=True).start()
+    unit = RemoteUnit(name, transport=client_end,
+                      retry_interval=retry_interval, max_retries=max_retries,
+                      heartbeat=heartbeat, patience=patience)
+    return unit, worker
+
+
+class _PartitionOnWork:
+    """Worker-side medium that goes dark the instant the first work frame
+    arrives: the frame is swallowed *before* delivery and everything
+    after it (heartbeats included) is silently dropped — a frozen
+    process / network partition, as opposed to a visible EOF."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.dark = threading.Event()
+
+    def send(self, frame):
+        if self.dark.is_set():
+            return
+        self.inner.send(frame)
+
+    def recv(self, timeout=None):
+        frame = self.inner.recv(timeout)
+        if frame is not None and frame.get("kind") in ("submit",
+                                                       "work_batch"):
+            self.dark.set()
+        if self.dark.is_set():
+            return None
+        return frame
+
+    def close(self):
+        self.inner.close()
+
+    @property
+    def closed(self):
+        return self.inner.closed
+
+
+class TestHeartbeatLiveness:
+    def test_heartbeat_spec_knobs_parse(self):
+        unit = make_backend("remote:127.0.0.1:1?heartbeat=0.5&patience=5",
+                            "r0")
+        assert unit.heartbeat == 0.5
+        assert unit.patience == 5
+
+    def test_heartbeat_defaults_off(self):
+        unit = make_backend("remote:127.0.0.1:1", "r0")
+        assert unit.heartbeat is None
+
+    def test_heartbeat_knob_must_be_numeric(self):
+        with pytest.raises(ValueError, match="number of seconds"):
+            make_backend("remote:127.0.0.1:1?heartbeat=fast", "r0")
+
+    def test_heartbeat_knob_must_be_positive(self):
+        with pytest.raises(ValueError, match="positive"):
+            make_backend("remote:127.0.0.1:1?heartbeat=0", "r0")
+
+    def test_patience_must_be_at_least_one(self):
+        with pytest.raises(ValueError, match="patience"):
+            RemoteUnit("r0", address="127.0.0.1:1", heartbeat=0.1,
+                       patience=0)
+
+    def test_worker_sends_heartbeats_with_queue_depth(self):
+        unit, _worker = heartbeat_loopback_unit("r0", heartbeat=0.02)
+        rec = Recorder(per_item_sleep=1e-4)
+        bus = CompletionBus()
+        unit.start(bus)
+        try:
+            for i in range(4):
+                unit.submit(Chunk(i * 10, (i + 1) * 10, "r0"), rec)
+            unit.flush()
+            recs = []
+            deadline = time.perf_counter() + 10.0
+            # wait for all completions AND at least one liveness frame
+            while (len(recs) < 4 or unit.last_heartbeat is None):
+                assert time.perf_counter() < deadline, (
+                    f"{len(recs)}/4 done, beat={unit.last_heartbeat}")
+                bus.wait(timeout=0.2)
+                recs.extend(bus.drain())
+        finally:
+            unit.close()
+        assert len(recs) == 4 and not any(r.error for r in recs)
+        beat = unit.last_heartbeat
+        assert beat["unit"] == "r0"
+        assert beat["queue_depth"] >= 0 and beat["inflight"] >= 0
+        rec.assert_exactly_once(40)
+
+    def test_silent_partition_is_convicted_dead_not_hung(self):
+        # the worker freezes before executing anything: heartbeats stop,
+        # the connection never drops.  Without conviction the client
+        # would burn max_retries * retry_interval = 30s; with it, the
+        # run ends in ~patience * heartbeat and the survivor covers the
+        # space with STRICT exact-once side effects (the frozen worker
+        # never ran its chunk).
+        client_end, worker_end = LoopbackTransport.pair()
+        worker = RemoteWorker(_PartitionOnWork(worker_end),
+                              poll_interval=0.02)
+        threading.Thread(target=worker.serve, daemon=True).start()
+
+        rec = Recorder(per_item_sleep=1e-5)
+        rt = HeteroRuntime()
+        rt.register_unit("r0", WorkerKind.CC, work_fn=rec,
+                         backend=RemoteUnit("r0", transport=client_end,
+                                            retry_interval=0.05,
+                                            max_retries=600,
+                                            heartbeat=0.02, patience=3))
+        rt.register_unit("cc0", WorkerKind.CC, work_fn=rec)
+        t0 = time.perf_counter()
+        rep = rt.parallel_for(num_items=120, policy="multidynamic",
+                              engine="interrupt", acc_chunk=8)
+        wall = time.perf_counter() - t0
+        assert rep.items == 120
+        assert_exact_tiling(rep.coverage, 120)
+        rec.assert_exactly_once(120)  # strict: the dead unit ran nothing
+        dead = [e for e in rep.events if e["action"] == "dead"]
+        assert len(dead) == 1 and dead[0]["unit"] == "r0"
+        assert wall < 10.0, (
+            f"conviction took {wall:.1f}s — heartbeat liveness did not "
+            "beat the retransmit budget"
+        )
+
+    def test_idle_conviction_posts_membership_event_without_chunk(self):
+        # silence with nothing in flight: the conviction is a pure
+        # membership event (chunk=None), not a requeue
+        client_end, worker_end = LoopbackTransport.pair()
+        worker = RemoteWorker(worker_end, poll_interval=0.02)
+        threading.Thread(target=worker.serve, daemon=True).start()
+        mute = _PartitionOnWork(client_end)
+        unit = RemoteUnit("r0", transport=mute, retry_interval=0.05,
+                          max_retries=600, heartbeat=0.02, patience=3)
+        bus = CompletionBus()
+        unit.start(bus)
+        try:
+            # freeze the medium with nothing submitted
+            mute.dark.set()
+            deadline = time.perf_counter() + 10.0
+            recs = []
+            while not recs and time.perf_counter() < deadline:
+                bus.wait(timeout=0.2)
+                recs = bus.drain()
+            assert recs, "idle conviction never posted"
+            from repro.core import WorkerDead
+            assert isinstance(recs[0].error, WorkerDead)
+            assert recs[0].chunk is None
+        finally:
+            unit.close()
+
+    def test_slow_worker_is_not_convicted(self):
+        # per-item work far slower than the heartbeat interval: the
+        # heartbeats keep flowing, so patience never runs out — slowness
+        # is the straggler layer's problem, not a liveness verdict
+        unit, _worker = heartbeat_loopback_unit("r0", heartbeat=0.02,
+                                                patience=3)
+        rec = Recorder(per_item_sleep=2e-3)  # 20ms/chunk >> heartbeat
+        recs = _drive_direct(unit, [Chunk(i * 10, (i + 1) * 10, "r0")
+                                    for i in range(6)], rec)
+        assert len(recs) == 6
+        assert not any(r.error for r in recs)
+        rec.assert_exactly_once(60)
+
+
+def heartbeat_battery_run(seed):
+    """One seeded run with faults injected ONLY into heartbeat frames
+    (drop/delay), while a slow-but-alive remote unit works: no false
+    conviction is allowed."""
+    import random
+
+    rng = random.Random(seed)
+    n_items = rng.randint(60, 160)
+    acc_chunk = rng.choice([4, 8])
+    drop = rng.uniform(0.0, 0.3)
+    delay = rng.uniform(0.0, 0.3)
+    patience = rng.randint(8, 12)
+    rec = Recorder(per_item_sleep=rng.uniform(0.5, 2.0) * 1e-4)
+    rt = HeteroRuntime()
+    unit, _worker = heartbeat_loopback_unit(
+        "r0", heartbeat=0.02, patience=patience,
+        hb_seed=seed * 31 + 7, drop=drop, delay=delay, max_delay=0.01)
+    rt.register_unit("r0", WorkerKind.CC, work_fn=rec, backend=unit)
+    rt.register_unit("cc0", WorkerKind.CC, work_fn=rec)
+    rep = rt.parallel_for(num_items=n_items, policy="multidynamic",
+                          engine="interrupt", acc_chunk=acc_chunk)
+    return rep, rec, n_items
+
+
+class TestHeartbeatFaultBattery:
+    """≥20 seeded heartbeat-only fault schedules: dropped/delayed
+    liveness frames must never convict a slow-but-alive worker, and a
+    truly dead worker is always exact-once."""
+
+    @given(seed=st.integers(0, 10**6))
+    @settings(max_examples=20, deadline=None)
+    def test_no_false_conviction_under_heartbeat_faults(self, seed):
+        rep, rec, n_items = heartbeat_battery_run(seed)
+        assert rep.items == n_items
+        assert_exact_tiling(rep.coverage, n_items)
+        rec.assert_exactly_once(n_items)
+        bad = [e for e in (rep.events or [])
+               if e["action"] in ("dead", "lost")]
+        assert not bad, f"false conviction of a live worker: {bad}"
+        times = [e["t"] for e in (rep.events or [])]
+        assert times == sorted(times), "events not monotone"
+
+    @given(seed=st.integers(0, 10**6))
+    @settings(max_examples=20, deadline=None)
+    def test_true_death_is_exact_once_every_seed(self, seed):
+        import random
+
+        rng = random.Random(seed)
+        n_items = rng.randint(60, 160)
+        acc_chunk = rng.choice([4, 8])
+        client_end, worker_end = LoopbackTransport.pair()
+        worker = RemoteWorker(_PartitionOnWork(worker_end),
+                              poll_interval=0.02)
+        threading.Thread(target=worker.serve, daemon=True).start()
+        rec = Recorder(per_item_sleep=1e-5)
+        rt = HeteroRuntime()
+        rt.register_unit(
+            "r0", WorkerKind.CC, work_fn=rec,
+            backend=RemoteUnit("r0", transport=client_end,
+                               retry_interval=0.05, max_retries=600,
+                               heartbeat=0.02, patience=rng.randint(2, 5)))
+        rt.register_unit("cc0", WorkerKind.CC, work_fn=rec)
+        rep = rt.parallel_for(num_items=n_items, policy="multidynamic",
+                              engine="interrupt", acc_chunk=acc_chunk)
+        assert rep.items == n_items
+        assert_exact_tiling(rep.coverage, n_items)
+        rec.assert_exactly_once(n_items)  # strict: dead unit ran nothing
+        dead = [e for e in rep.events if e["action"] == "dead"]
+        assert len(dead) == 1 and dead[0]["unit"] == "r0"
+
+
+# ---------------------------------------------------------------------------
+# lifecycle bug batch: close() idempotence, bye warnings, pump resilience
+# ---------------------------------------------------------------------------
+class _ByeFailsTransport(FrameTap):
+    """Raises on the graceful bye (a worker that died first)."""
+
+    def _forward(self, frame):
+        if frame.get("kind") == "bye":
+            raise TransportError("injected: peer already gone")
+        self.inner.send(frame)
+
+
+class _FlakyPumpWorker(RemoteWorker):
+    """First two completion-pump passes die with an unexpected error —
+    the regression shape: an exception on the done-posting path."""
+
+    _faults = 2
+
+    def _pump_once(self):
+        if self._faults > 0:
+            self._faults -= 1
+            raise RuntimeError("injected pump fault")
+        super()._pump_once()
+
+
+class _DoneSendRaises(FlakyTransport):
+    """Worker-side medium whose send *raises* on completion frames —
+    both the original and the stripped resend fail."""
+
+    def __init__(self, inner):
+        super().__init__(inner, seed=0)
+
+    def send(self, frame):
+        if isinstance(frame, dict) and frame.get("kind") in ("done",
+                                                             "done_batch"):
+            raise RuntimeError("injected send-path fault")
+        self.inner.send(frame)
+
+
+class TestLifecycleBugBatch:
+    def test_close_is_idempotent(self):
+        unit, tap, _worker = tapped_loopback_unit("r0")
+        rec = Recorder()
+        _drive_direct(unit, [Chunk(0, 8, "r0")], rec)  # closes once
+        unit.close()
+        unit.close()
+        assert len(tap.frames("bye")) == 1, (
+            "a second close() re-sent bye on a closed session"
+        )
+
+    def test_failed_bye_is_logged_not_swallowed(self, caplog):
+        unit, _tap, _worker = tapped_loopback_unit(
+            "r0", tap_cls=_ByeFailsTransport)
+        rec = Recorder()
+        bus = CompletionBus()
+        unit.start(bus)
+        unit.submit(Chunk(0, 8, "r0"), rec)
+        deadline = time.perf_counter() + 10.0
+        recs = []
+        while not recs and time.perf_counter() < deadline:
+            bus.wait(timeout=0.2)
+            recs = bus.drain()
+        assert recs and recs[0].error is None
+        import logging
+        with caplog.at_level(logging.WARNING, logger="repro.core.transport"):
+            unit.close()
+        assert any("graceful bye failed" in r.message for r in caplog.records)
+        unit.close()  # still idempotent after the failure path
+
+    def test_pump_exception_does_not_drop_completions(self):
+        # the pump's first passes die; the completion must still arrive
+        # (guard keeps the thread alive; the done cache makes the item
+        # recoverable) instead of the old silent-stall behavior
+        client_end, worker_end = LoopbackTransport.pair()
+        worker = _FlakyPumpWorker(worker_end, poll_interval=0.02)
+        threading.Thread(target=worker.serve, daemon=True).start()
+        unit = RemoteUnit("r0", transport=client_end,
+                          retry_interval=0.05, max_retries=100)
+        rec = Recorder()
+        recs = _drive_direct(unit, [Chunk(i * 8, (i + 1) * 8, "r0")
+                                    for i in range(5)], rec)
+        assert len(recs) == 5
+        assert not any(r.error for r in recs)
+        rec.assert_exactly_once(40)
+
+    def test_done_send_failure_ends_session_deliberately(self):
+        # when even the stripped completion cannot be sent, the worker
+        # must end the session (definitive EOF -> WorkerLost -> requeue)
+        # instead of leaving a half-dead session that answers busy
+        # probes forever while never delivering a completion
+        client_end, worker_end = LoopbackTransport.pair()
+        worker = RemoteWorker(_DoneSendRaises(worker_end),
+                              poll_interval=0.02)
+        threading.Thread(target=worker.serve, daemon=True).start()
+        rec = Recorder(per_item_sleep=1e-5)
+        rt = HeteroRuntime()
+        rt.register_unit("r0", WorkerKind.CC, work_fn=rec,
+                         backend=RemoteUnit("r0", transport=client_end,
+                                            retry_interval=0.05,
+                                            max_retries=600))
+        rt.register_unit("cc0", WorkerKind.CC, work_fn=rec)
+        t0 = time.perf_counter()
+        rep = rt.parallel_for(num_items=100, policy="multidynamic",
+                              engine="interrupt", acc_chunk=8)
+        wall = time.perf_counter() - t0
+        assert rep.items == 100
+        assert_exact_tiling(rep.coverage, 100)
+        assert set(rec.counts) == set(range(100))  # at-least-once boundary
+        lost = [e for e in rep.events if e["action"] == "lost"]
+        assert len(lost) == 1 and lost[0]["unit"] == "r0"
+        assert wall < 15.0, (
+            f"run took {wall:.1f}s — the dead session was not ended "
+            "deliberately"
+        )

@@ -12,6 +12,9 @@
 * every config entry carries ``policy``/``mode``/``backend`` and a
   ``metrics`` dict whose keys are exactly
   :data:`repro.serving.loadgen.METRIC_KEYS`;
+* every config entry completed at least one request — a run with
+  ``completed == 0`` reports ``nan`` latency percentiles, and "no
+  data" is a violation, never a pass;
 * at least two policies and both refill modes are covered;
 * with ``--require-continuous-wins``: for every (policy, backend) pair
   that has both modes, ``mode="continuous"`` strictly beats
@@ -41,6 +44,15 @@ batched/baseline ``chunks_per_sec`` >= S), ``--min-auto-ratio R``
 (``batch_frames="auto"`` vs fixed on the flaky-delay transport >= R)
 and ``--min-split-ratio R`` (throughput-only / latency-aware learned
 makespan >= R — the latency terms must not make the split worse).
+
+``bench_fleet/v1`` checks (``benchmarks/bench_fleet.py``): a seeded
+``params`` block, a ``recovery`` study (checkpoint-backed resume vs
+full recompute after mid-run fleet death; ``recovery_ratio`` must be
+consistent and strictly > 1.0, and >= ``--min-recovery-ratio`` when
+given) and a ``churn`` study (heartbeat-convicted membership vs static
+membership under the same failure trace; detection-time and goodput
+ratios must be consistent and >= 1.0).
+
 ``--schema NAME`` pins the expected schema so CI cannot silently
 validate the wrong artifact kind.
 
@@ -64,6 +76,7 @@ from repro.serving.loadgen import METRIC_KEYS  # noqa: E402
 SCHEMA = "bench_serving/v1"
 COSTMODEL_SCHEMA = "bench_costmodel/v1"
 DISPATCH_SCHEMA = "bench_dispatch/v2"
+FLEET_SCHEMA = "bench_fleet/v1"
 
 _DISPATCH_TRANSPORTS = ("loopback", "socket", "flaky")
 _DISPATCH_MODES = ("baseline", "cached", "batched")
@@ -269,6 +282,111 @@ def check_costmodel(doc: dict, *, max_gap: float = 0.10) -> list:
     return errs
 
 
+def check_fleet(doc: dict, *, min_recovery_ratio: float = 0.0) -> list:
+    """Return violation strings for a ``bench_fleet/v1`` artifact.
+
+    Structural checks (fresh smoke runs and the committed artifact
+    alike): a seeded ``params`` block; a ``recovery`` study whose
+    ``recovery_ratio`` equals ``full_recompute_s / resume_s`` and whose
+    resume re-ran strictly fewer items than the full space; a ``churn``
+    study whose detection and goodput ratios are consistent with their
+    components.  Both runs are SimulatedClock-deterministic, so the
+    ordering gates also apply everywhere:
+
+    * ``recovery_ratio`` must exceed 1.0 — checkpoint-backed recovery
+      strictly faster than recomputing the whole pre-split — and, with
+      ``--min-recovery-ratio R``, at least R (CI pins the committed
+      artifact's margin);
+    * churn ``detect_ratio`` (static-membership detection time over
+      heartbeat detection time) and ``goodput_ratio`` must be >= 1.0:
+      heartbeat conviction never detects later than waiting out the
+      retransmit budget, and never yields less goodput under churn.
+    """
+    errs = []
+    if doc.get("schema") != FLEET_SCHEMA:
+        errs.append(f"schema is {doc.get('schema')!r}, want {FLEET_SCHEMA!r}")
+    params = doc.get("params")
+    if not isinstance(params, dict):
+        errs.append("missing 'params' block")
+    else:
+        for field in ("seed", "num_units", "items", "heartbeat", "patience"):
+            if field not in params:
+                errs.append(f"params missing {field!r}")
+
+    rec = doc.get("recovery")
+    if not isinstance(rec, dict):
+        errs.append("missing 'recovery' study")
+    else:
+        for field in ("full_recompute_s", "resume_s", "full_recompute_items",
+                      "resume_items", "recovery_ratio"):
+            v = rec.get(field)
+            if not isinstance(v, (int, float)) or not v > 0:
+                errs.append(f"recovery: {field} must be positive, got {v!r}")
+        if not errs:
+            if not rec["resume_items"] < rec["full_recompute_items"]:
+                errs.append(
+                    f"recovery: resume re-ran {rec['resume_items']} of "
+                    f"{rec['full_recompute_items']} items — the checkpoint "
+                    "saved nothing"
+                )
+            want = rec["full_recompute_s"] / rec["resume_s"]
+            got = rec["recovery_ratio"]
+            if abs(got - want) > 1e-6 * want:
+                errs.append(f"recovery_ratio {got!r} inconsistent with "
+                            f"times ({want:.4f})")
+            elif not got > 1.0:
+                errs.append(
+                    f"recovery_ratio {got:.3f} — checkpoint-backed resume "
+                    "must be strictly faster than full recompute"
+                )
+            elif min_recovery_ratio > 0 and not got >= min_recovery_ratio:
+                errs.append(
+                    f"recovery_ratio {got:.2f}x below the required "
+                    f"{min_recovery_ratio:.2f}x"
+                )
+
+    churn = doc.get("churn")
+    if not isinstance(churn, dict):
+        errs.append("missing 'churn' study")
+        return errs
+    for field in ("heartbeat_detect_s", "static_detect_s", "detect_ratio",
+                  "heartbeat_goodput", "static_goodput", "goodput_ratio"):
+        v = churn.get(field)
+        if not isinstance(v, (int, float)) or not v > 0:
+            errs.append(f"churn: {field} must be positive, got {v!r}")
+            return errs
+    want = churn["static_detect_s"] / churn["heartbeat_detect_s"]
+    if abs(churn["detect_ratio"] - want) > 1e-6 * want:
+        errs.append(f"churn detect_ratio {churn['detect_ratio']!r} "
+                    f"inconsistent with detection times ({want:.4f})")
+    elif not churn["detect_ratio"] >= 1.0:
+        errs.append(
+            f"churn detect_ratio {churn['detect_ratio']:.3f} — heartbeat "
+            "conviction detected failures later than static membership"
+        )
+    want = churn["heartbeat_goodput"] / churn["static_goodput"]
+    if abs(churn["goodput_ratio"] - want) > 1e-6 * want:
+        errs.append(f"churn goodput_ratio {churn['goodput_ratio']!r} "
+                    f"inconsistent with goodputs ({want:.4f})")
+    elif not churn["goodput_ratio"] >= 1.0:
+        errs.append(
+            f"churn goodput_ratio {churn['goodput_ratio']:.3f} — heartbeat "
+            "membership lost goodput vs static under the same churn"
+        )
+    return errs
+
+
+def _no_data(metrics: dict) -> bool:
+    """True when the run completed nothing (latency metrics are nan)."""
+    if metrics.get("completed", 0) == 0:
+        return True
+    return any(
+        isinstance(metrics.get(k), float) and metrics[k] != metrics[k]
+        for k in ("mean_latency_s", "p50_latency_s", "p95_latency_s",
+                  "p99_latency_s")
+    )
+
+
 def check(doc: dict, *, require_continuous_wins: bool = False) -> list:
     """Return a list of violation strings (empty = artifact is valid)."""
     errs = []
@@ -298,6 +416,11 @@ def check(doc: dict, *, require_continuous_wins: bool = False) -> list:
             errs.append(f"configs[{i}] metrics missing {sorted(missing)}")
         if extra:
             errs.append(f"configs[{i}] metrics has extra keys {sorted(extra)}")
+        if _no_data(metrics):
+            errs.append(
+                f"configs[{i}] completed no requests (nan latencies) — "
+                "no data is not a pass"
+            )
         key = (entry.get("policy"), entry.get("backend"))
         by_pair.setdefault(key, {})[entry.get("mode")] = metrics
 
@@ -346,6 +469,10 @@ def main(argv: list) -> int:
                     help="bench_dispatch: required throughput-only / "
                          "latency-aware learned-split makespan ratio "
                          "(0 = structural checks only)")
+    ap.add_argument("--min-recovery-ratio", type=float, default=0.0,
+                    help="bench_fleet: required full-recompute / "
+                         "checkpoint-resume time ratio (the >1.0 strict "
+                         "ordering is always enforced)")
     args = ap.parse_args(argv)
     with open(args.path) as fh:
         doc = json.load(fh)
@@ -360,6 +487,8 @@ def main(argv: list) -> int:
         errs = check_dispatch(doc, min_speedup=args.min_speedup,
                               min_auto_ratio=args.min_auto_ratio,
                               min_split_ratio=args.min_split_ratio)
+    elif schema == FLEET_SCHEMA:
+        errs = check_fleet(doc, min_recovery_ratio=args.min_recovery_ratio)
     else:
         errs = check(doc, require_continuous_wins=args.require_continuous_wins)
     for e in errs:
